@@ -1,0 +1,59 @@
+"""Fig. 7 / Fig. 8 analogue: DRAM-offloaded simulation vs per-gate offloading
+(the QDAO comparison). Reports wall time and host<->device shard transfers —
+the transfer count is the paper's mechanism: staged offloading moves each
+shard once per STAGE; per-gate offloading once per GATE."""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+from repro.core.generators import FAMILIES
+from repro.core.partition import partition
+from repro.sim.offload import OffloadedExecutor, PerGateOffloadExecutor
+
+
+def run(fam: str = "qft", ns=(14, 15, 16, 17), L: int = 12) -> List[Dict]:
+    rows = []
+    for n in ns:
+        c = FAMILIES[fam](n)
+        plan = partition(c, L, n - L, 0, time_limit=30)
+        ex = OffloadedExecutor(c, plan)
+        t0 = time.time()
+        ex.run()
+        t_atlas = time.time() - t0
+        pg = PerGateOffloadExecutor(c, L)
+        t0 = time.time()
+        pg.run()
+        t_pg = time.time() - t0
+        rows.append({
+            "family": fam, "n": n, "L": L, "stages": plan.n_stages,
+            "atlas_time_s": t_atlas, "pergate_time_s": t_pg,
+            "atlas_transfers": ex.stats["shard_transfers"],
+            "pergate_transfers": pg.stats["shard_transfers"],
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="qft")
+    ap.add_argument("--min-n", type=int, default=14)
+    ap.add_argument("--max-n", type=int, default=17)
+    ap.add_argument("--L", type=int, default=12)
+    args = ap.parse_args(argv)
+    rows = run(args.family, range(args.min_n, args.max_n + 1), args.L)
+    print("family,n,L,stages,atlas_time_s,pergate_time_s,speedup,"
+          "atlas_transfers,pergate_transfers,transfer_ratio")
+    for r in rows:
+        print(f"{r['family']},{r['n']},{r['L']},{r['stages']},"
+              f"{r['atlas_time_s']:.3f},{r['pergate_time_s']:.3f},"
+              f"{r['pergate_time_s'] / r['atlas_time_s']:.2f},"
+              f"{r['atlas_transfers']},{r['pergate_transfers']},"
+              f"{r['pergate_transfers'] / r['atlas_transfers']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Fig. 9 / Fig. 12 reproduction: number of stages, ILP vs SnuQS-style greedy.
+
+Paper setting: 11 circuit families, 31 qubits, local qubits swept, at most 2
+non-local qubits regional. Default here is a scaled-down sweep (n=20) that
+finishes in minutes on one CPU core; ``--paper-scale`` runs n=31.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.generators import FAMILIES
+from repro.core.staging import stage_greedy, stage_ilp, validate_staging
+
+CACHE = os.path.join(os.path.dirname(__file__), "dryrun_results", "staging_bench.json")
+
+
+def run(n: int = 20, locals_sweep=None, families=None, time_limit: float = 60.0,
+        cache_path: str = CACHE) -> List[Dict]:
+    locals_sweep = locals_sweep or [n - 6, n - 5, n - 4, n - 3]
+    families = families or sorted(FAMILIES)
+    cache = {}
+    if os.path.exists(cache_path):
+        with open(cache_path) as f:
+            cache = json.load(f)
+    rows = []
+    for fam in families:
+        c = FAMILIES[fam](n)
+        for L in locals_sweep:
+            R = min(2, n - L)
+            G = n - L - R
+            key = f"{fam}:{n}:{L}"
+            if key in cache:
+                rows.append(cache[key])
+                continue
+            t0 = time.time()
+            ilp = stage_ilp(c, L, R, G, time_limit=time_limit)
+            validate_staging(c, ilp.stages, L, R, G)
+            greedy = stage_greedy(c, L, R, G)
+            validate_staging(c, greedy.stages, L, R, G)
+            row = {
+                "family": fam, "n": n, "L": L,
+                "ilp_stages": len(ilp.stages),
+                "greedy_stages": len(greedy.stages),
+                "ilp_cost": ilp.objective,
+                "greedy_cost": greedy.objective,
+                "ilp_time_s": time.time() - t0,
+            }
+            rows.append(row)
+            cache[key] = row
+            os.makedirs(os.path.dirname(cache_path), exist_ok=True)
+            with open(cache_path, "w") as f:
+                json.dump(cache, f)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20)
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--families", default="")
+    args = ap.parse_args(argv)
+    n = 31 if args.paper_scale else args.n
+    fams = args.families.split(",") if args.families else None
+    rows = run(n=n, families=fams)
+    print("family,n,L,ilp_stages,greedy_stages,ilp_cost,greedy_cost,ilp_time_s")
+    for r in rows:
+        print(f"{r['family']},{r['n']},{r['L']},{r['ilp_stages']},"
+              f"{r['greedy_stages']},{r['ilp_cost']},{r['greedy_cost']},"
+              f"{r['ilp_time_s']:.2f}")
+    by_L: Dict[int, List] = {}
+    for r in rows:
+        by_L.setdefault(r["L"], []).append(r)
+    print("\n# geometric-mean stages (Fig. 9 analogue)")
+    print("L,ilp_geomean,greedy_geomean")
+    for L, rs in sorted(by_L.items()):
+        gi = float(np.exp(np.mean([np.log(r["ilp_stages"]) for r in rs])))
+        gg = float(np.exp(np.mean([np.log(r["greedy_stages"]) for r in rs])))
+        print(f"{L},{gi:.3f},{gg:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--results-dir ...]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+HW_PEAK = 197e12
+HBM_BW = 819e9
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f} TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    return f"{b/1e6:.1f} MB"
+
+
+def load(results_dir: str) -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*__*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        if len(parts) != 3:
+            continue
+        arch, shape, mesh = parts
+        with open(p) as f:
+            d = json.load(f)
+        d.update({"arch": arch, "shape": shape, "mesh_tag": mesh})
+        rows.append(d)
+    return rows
+
+
+def roofline_fraction(d: Dict) -> float:
+    rl = d["roofline"]
+    tmax = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+    if tmax <= 0:
+        return 0.0
+    if d["kind"] == "decode":
+        # decode is bandwidth-bound by nature: fraction vs the memory roofline
+        ideal = rl["hbm_bytes"] / HBM_BW
+        return ideal / tmax
+    ideal = rl["model_flops"] / d["n_chips"] / HW_PEAK
+    return ideal / tmax
+
+
+def dryrun_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile s | args/dev | temp/dev | collectives (count) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("status") == "skipped":
+            out.append(f"| {d['arch']} | {d['shape']} | {d['mesh_tag']} | "
+                       f"SKIP ({d['reason'][:48]}) | | | | |")
+            continue
+        if d.get("status") != "ok":
+            out.append(f"| {d['arch']} | {d['shape']} | {d['mesh_tag']} | "
+                       f"**FAIL** | | | | |")
+            continue
+        ma = d["memory_analysis"]
+        args_b = ma.get("argument_size_in_bytes", 0)
+        temp_b = ma.get("temp_size_in_bytes", 0) / max(d["n_chips"], 1)
+        colls = d["roofline"]["coll_detail"]
+        cstr = ", ".join(f"{k}:{int(v['count'])}" for k, v in sorted(colls.items()))
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh_tag']} | ok | "
+            f"{d['compile_s']:.0f} | {fmt_bytes(args_b)} | {fmt_bytes(temp_b)} | "
+            f"{cstr or '—'} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | t_comp s | t_mem s | t_coll s | dominant | "
+           "MODEL_FLOPS | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("status") != "ok":
+            continue
+        rl = d["roofline"]
+        frac = roofline_fraction(d)
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh_tag']} | "
+            f"{rl['t_compute_s']:.3g} | {rl['t_memory_s']:.3g} | "
+            f"{rl['t_collective_s']:.3g} | {rl['dominant']} | "
+            f"{rl['model_flops']:.2e} | {rl['useful_ratio']:.2f} | {frac:.3f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir",
+                    default=os.path.join(os.path.dirname(__file__), "dryrun_results"))
+    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args(argv)
+    rows = load(args.results_dir)
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run table (per (arch x shape x mesh))\n")
+        print(dryrun_table(rows))
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline table (per-device seconds, v5e constants)\n")
+        print(roofline_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Benchmark driver: one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (plus each harness's
+own detailed CSV). Scaled-down defaults finish on one CPU core; pass
+``--paper-scale`` for the paper's circuit sizes.
+
+Harness -> paper artifact map:
+  bench_staging    -> Fig. 9 / Fig. 12 (stage counts, ILP vs SnuQS greedy)
+  bench_kernelize  -> Fig. 10 / Fig. 13 (kernelization cost + pruning sweep)
+  bench_e2e        -> Fig. 5 (weak scaling, distributed executor)
+  bench_offload    -> Fig. 7 / Fig. 8 (DRAM offloading vs QDAO-style)
+  bench_breakdown  -> Fig. 6 (comm/comp breakdown)
+  bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument(
+        "--skip", default="sim_dryrun",
+        help="comma list: staging,kernelize,e2e,offload,breakdown,sim_dryrun",
+    )
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    summary = []
+
+    def section(name):
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}", flush=True)
+
+    if "staging" not in skip:
+        section("bench_staging (Fig. 9/12: #stages, ILP vs SnuQS-greedy)")
+        from . import bench_staging
+
+        t0 = time.time()
+        rows = bench_staging.main(["--paper-scale"] if args.paper_scale else [])
+        dt = time.time() - t0
+        wins = sum(1 for r in rows if r["ilp_stages"] < r["greedy_stages"])
+        ties = sum(1 for r in rows if r["ilp_stages"] == r["greedy_stages"])
+        summary.append(("bench_staging", 1e6 * dt / max(len(rows), 1),
+                        f"ilp_better_or_equal={wins + ties}/{len(rows)}"))
+
+    if "kernelize" not in skip:
+        section("bench_kernelize (Fig. 10/13: kernelization cost)")
+        from . import bench_kernelize
+
+        t0 = time.time()
+        rows = bench_kernelize.main(["--paper-scale"] if args.paper_scale else [])
+        dt = time.time() - t0
+        import numpy as np
+
+        rel = float(np.exp(np.mean(np.log([r["dp_cost"] / r["greedy_cost"]
+                                           for r in rows]))))
+        summary.append(("bench_kernelize", 1e6 * dt / max(len(rows), 1),
+                        f"dp_vs_greedy_geomean={rel:.3f}"))
+
+    if "e2e" not in skip:
+        section("bench_e2e (Fig. 5: weak scaling)")
+        from . import bench_e2e
+
+        t0 = time.time()
+        rows = bench_e2e.main([])
+        dt = time.time() - t0
+        summary.append(("bench_e2e", 1e6 * dt / max(len(rows), 1),
+                        f"cells={len(rows)}"))
+
+    if "offload" not in skip:
+        section("bench_offload (Fig. 7/8: DRAM offloading vs per-gate)")
+        from . import bench_offload
+
+        t0 = time.time()
+        rows = bench_offload.main([])
+        dt = time.time() - t0
+        ratio = rows[-1]["pergate_transfers"] / rows[-1]["atlas_transfers"]
+        summary.append(("bench_offload", 1e6 * dt / max(len(rows), 1),
+                        f"transfer_reduction={ratio:.1f}x"))
+
+    if "breakdown" not in skip:
+        section("bench_breakdown (Fig. 6: comm/comp fractions)")
+        from . import bench_breakdown
+
+        t0 = time.time()
+        bench_breakdown.main([])
+        dt = time.time() - t0
+        summary.append(("bench_breakdown", 1e6 * dt / 3, "roofline-derived"))
+
+    if "sim_dryrun" not in skip:
+        section("bench_sim_dryrun (512-chip simulator dry-run)")
+        from . import bench_sim_dryrun
+
+        t0 = time.time()
+        bench_sim_dryrun.main([])
+        dt = time.time() - t0
+        summary.append(("bench_sim_dryrun", 1e6 * dt, "see dryrun_results/"))
+
+    print(f"\n{'=' * 70}\n== summary CSV\n{'=' * 70}")
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + greedy decode with a KV cache on the
+reduced deepseek-v2-lite config (MLA attention, MoE experts) — the same
+serve_step the decode_32k dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    serve_mod.main([
+        "--arch", "deepseek-v2-lite-16b", "--reduced",
+        "--batch", "4", "--prompt-len", "32", "--gen-len", "16",
+    ])
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

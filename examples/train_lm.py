@@ -1,0 +1,60 @@
+"""End-to-end training driver example: train a qwen2-family model for a few
+hundred steps on synthetic data with checkpointing and fault tolerance, then
+verify the loss dropped.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Default width is CPU-sized (~20M params, finishes in minutes on one core);
+``--d-model 768 --layers 12`` is the ~100M configuration for a real
+accelerator, where the identical driver scales via --data-par/--model-par
+(see repro.launch.train).
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    from repro.launch import train as train_mod
+    from repro.configs import registry
+
+    # ~100M-param custom config in the qwen2 family
+    cfg = dataclasses.replace(
+        get_arch("qwen2-1.5b"),
+        name="qwen2-100m", n_layers=args.layers, d_model=args.d_model,
+        n_heads=8, n_kv_heads=2, d_ff=args.d_model * 4, vocab_size=32000,
+        head_dim=32,
+    )
+    registry.ARCHS[cfg.name] = cfg
+
+    ckpt = os.path.join(tempfile.mkdtemp(), "ckpt")
+    hist = train_mod.main([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--global-batch", "16", "--seq", "128", "--lr", "1e-3",
+        "--log-every", "20", "--ckpt-dir", ckpt, "--ckpt-every", "100",
+    ])
+    first = np.mean([h["loss"] for h in hist[:2]])
+    last = np.mean([h["loss"] for h in hist[-2:]])
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first - 0.2 else 'no significant change'})")
+    assert last < first, "training did not reduce the loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

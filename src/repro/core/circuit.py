@@ -1,0 +1,193 @@
+"""Quantum circuit IR.
+
+A :class:`Circuit` is a sequence of :class:`Gate`\\ s over ``n_qubits`` logical
+qubits. Gate qubit order convention: ``gate.qubits[j]`` is the circuit qubit
+bound to *gate bit* ``j`` (bit 0 = least significant of the gate's ``2^k``
+index space; controls occupy the most-significant gate bits, see
+:func:`repro.core.gates.controlled`).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from . import gates as G
+
+
+@dataclass(frozen=True)
+class Gate:
+    name: str
+    qubits: Tuple[int, ...]  # circuit qubit per gate bit (low -> high)
+    params: Tuple[float, ...] = ()
+    gid: int = -1  # position in the circuit sequence
+
+    def __post_init__(self):
+        if len(set(self.qubits)) != len(self.qubits):
+            raise ValueError(f"duplicate qubits in gate {self.name}: {self.qubits}")
+
+    @property
+    def n_qubits(self) -> int:
+        return len(self.qubits)
+
+    @property
+    def n_controls(self) -> int:
+        return G.GATE_DEFS[self.name].n_controls
+
+    @property
+    def matrix(self) -> np.ndarray:
+        return G.gate_matrix(self.name, self.params)
+
+    @property
+    def insular(self) -> Tuple[bool, ...]:
+        """Per-gate-bit insularity mask (paper Def. 2)."""
+        return G.insular_mask(self.matrix, self.n_controls)
+
+    @property
+    def non_insular_qubits(self) -> Tuple[int, ...]:
+        ins = self.insular
+        return tuple(q for j, q in enumerate(self.qubits) if not ins[j])
+
+    @property
+    def insular_qubits(self) -> Tuple[int, ...]:
+        ins = self.insular
+        return tuple(q for j, q in enumerate(self.qubits) if ins[j])
+
+    @property
+    def is_diagonal(self) -> bool:
+        return G.is_diagonal(self.matrix)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "qubits": list(self.qubits), "params": list(self.params)}
+
+
+@dataclass
+class Circuit:
+    n_qubits: int
+    gates: List[Gate] = field(default_factory=list)
+
+    # ------------------------------------------------------------------ build
+    def add(self, name: str, *qubits: int, params: Sequence[float] = ()) -> "Circuit":
+        gd = G.GATE_DEFS[name]
+        if len(qubits) != gd.n_qubits:
+            raise ValueError(f"gate {name} expects {gd.n_qubits} qubits, got {len(qubits)}")
+        for q in qubits:
+            if not (0 <= q < self.n_qubits):
+                raise ValueError(f"qubit {q} out of range [0, {self.n_qubits})")
+        self.gates.append(
+            Gate(name=name, qubits=tuple(qubits), params=tuple(params), gid=len(self.gates))
+        )
+        return self
+
+    # ------------------------------------------------------------- structure
+    @property
+    def n_gates(self) -> int:
+        return len(self.gates)
+
+    def qubit_sets(self) -> List[Set[int]]:
+        return [set(g.qubits) for g in self.gates]
+
+    def dependencies(self) -> List[Tuple[int, int]]:
+        """Adjacent gate pairs on the same qubit (paper's edge set E).
+
+        Returns (g1, g2) pairs with g1 earlier, such that g2 is the *next* gate
+        touching one of g1's qubits.
+        """
+        last: Dict[int, int] = {}
+        edges: List[Tuple[int, int]] = []
+        for i, g in enumerate(self.gates):
+            for q in g.qubits:
+                if q in last and last[q] != i:
+                    edges.append((last[q], i))
+                last[q] = i
+        return sorted(set(edges))
+
+    def dag_predecessors(self) -> List[List[int]]:
+        preds: List[List[int]] = [[] for _ in self.gates]
+        for a, b in self.dependencies():
+            preds[b].append(a)
+        return preds
+
+    def subcircuit(self, gate_ids: Iterable[int]) -> "Circuit":
+        sub = Circuit(self.n_qubits)
+        for gid in gate_ids:
+            g = self.gates[gid]
+            sub.gates.append(Gate(g.name, g.qubits, g.params, gid=len(sub.gates)))
+        return sub
+
+    # ---------------------------------------------------------- equivalence
+    def is_topologically_equivalent(self, order: Sequence[int]) -> bool:
+        """True iff executing gates in ``order`` (a permutation of gate ids)
+        respects all same-qubit orderings of this circuit."""
+        if sorted(order) != list(range(self.n_gates)):
+            return False
+        pos = {gid: i for i, gid in enumerate(order)}
+        for q in range(self.n_qubits):
+            ids = [g.gid for g in self.gates if q in g.qubits]
+            # Gates sharing a qubit commute if the shared qubit is insular to
+            # both and both act (anti-)diagonally on it; the conservative check
+            # (used by the correctness tests) requires exact order.
+            for a, b in zip(ids, ids[1:]):
+                if pos[a] > pos[b]:
+                    return False
+        return True
+
+    # -------------------------------------------------------------- (de)ser
+    def to_json(self) -> str:
+        return json.dumps(
+            {"n_qubits": self.n_qubits, "gates": [g.to_dict() for g in self.gates]}
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "Circuit":
+        d = json.loads(s)
+        c = Circuit(d["n_qubits"])
+        for g in d["gates"]:
+            c.add(g["name"], *g["qubits"], params=g["params"])
+        return c
+
+    # --------------------------------------------------------------- analyse
+    def unitary(self) -> np.ndarray:
+        """Dense 2^n x 2^n unitary (small n only; testing aid)."""
+        n = self.n_qubits
+        if n > 12:
+            raise ValueError("unitary() only for small circuits")
+        dim = 2**n
+        u = np.eye(dim, dtype=np.complex128)
+        for g in self.gates:
+            u = full_matrix(g, n) @ u
+        return u
+
+
+def full_matrix(g: Gate, n: int) -> np.ndarray:
+    """Embed gate ``g``'s matrix into the full 2^n space (testing aid)."""
+    k = g.n_qubits
+    m = g.matrix
+    dim = 2**n
+    out = np.zeros((dim, dim), dtype=np.complex128)
+    mask = 0
+    for q in g.qubits:
+        mask |= 1 << q
+    rest = [q for q in range(n) if not (mask >> q) & 1]
+    for base_bits in range(2 ** len(rest)):
+        base = 0
+        for j, q in enumerate(rest):
+            if (base_bits >> j) & 1:
+                base |= 1 << q
+        for r in range(2**k):
+            ri = base
+            for j, q in enumerate(g.qubits):
+                if (r >> j) & 1:
+                    ri |= 1 << q
+            for c in range(2**k):
+                if abs(m[r, c]) < 1e-16:
+                    continue
+                ci = base
+                for j, q in enumerate(g.qubits):
+                    if (c >> j) & 1:
+                        ci |= 1 << q
+                out[ri, ci] = m[r, c]
+    return out

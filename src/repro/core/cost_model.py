@@ -1,0 +1,107 @@
+"""Kernel cost model (paper §VI-B), re-derived for TPU v5e.
+
+The paper profiles two kernel execution modes on A100:
+
+* **fusion** — pre-multiply the member gates into one ``2^k x 2^k`` unitary and
+  apply it as a matmul (cuQuantum). Cost = f(k) only.
+* **shared-memory (shm)** — stream state-vector blocks through on-chip memory
+  and apply gates one by one. Cost = alpha + sum_g cost(g).
+
+TPU adaptation (all constants below are *analytical*, derived from published
+chip specs, since this container has no TPU to profile — the derivation
+replaces the paper's §VII-A microbenchmarks):
+
+* chip: TPU v5e — 197 TFLOP/s bf16, ~49 TFLOP/s fp32 MXU, 819 GB/s HBM,
+  ~128 MB VMEM.
+* state shard: ``2^L`` complex64 amplitudes (8 bytes each).
+* one HBM read+write pass over a 2^28-amplitude shard:
+  ``2 * 8 B * 2^28 / 819e9 = 5.24 ms`` -> ``PASS_US = 5243``.
+* fusion kernel with k qubits: matmul ``[2^(L-k), 2^k] x [2^k, 2^k]`` in
+  planar complex fp32 = ``8 * 2^L * 2^k`` real FLOPs
+  -> ``43.8 us * 2^k`` at 49 TFLOP/s; memory-bound until k ~ 7 (the 128-wide
+  MXU tile), compute doubles per extra qubit after that.
+* shm kernel: one streaming pass (= PASS_US) + per-gate VPU work inside VMEM;
+  VMEM-resident gate application ~ 200 us/gate per 2^28 shard (diagonal gates
+  half of that). Blocks must contain the lowest ``IO_QUBITS`` physical qubits
+  so each VMEM transfer moves >= one full (8,128) fp32 tile, mirroring the
+  paper's 128-byte minimum-transaction rule.
+
+Only *relative* costs matter to the kernelizer; everything is reported in
+microseconds for a 2^28-amplitude shard.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# hardware-derived constants (see module docstring)
+PASS_US = 5243.0  # one HBM read+write pass over a 2^28-amp shard
+MXU_US_PER_2K = 43.8  # fusion matmul time per 2^k at k=0 (fp32, 49 TF/s)
+LAUNCH_US = 10.0  # kernel dispatch overhead
+SHM_GATE_US = 200.0  # VPU cost per non-diagonal gate in VMEM
+SHM_DIAG_GATE_US = 100.0  # diagonal gates touch half the operand pairs
+MAX_FUSION_QUBITS = 7  # 2^7 = 128 = MXU tile width
+MAX_SHM_QUBITS = 13  # 2^13 complex64 = 64 KiB VMEM block (double-buffered)
+IO_QUBITS = 3  # lowest physical qubits forced into every shm kernel
+
+FUSION = 0
+SHM = 1
+
+
+def fusion_cost(k: int) -> float:
+    """Cost of a k-qubit fusion kernel (us per 2^28-amp shard)."""
+    if k > MAX_FUSION_QUBITS:
+        return float("inf")
+    return LAUNCH_US + max(PASS_US, MXU_US_PER_2K * (2**k))
+
+
+def shm_open_cost() -> float:
+    """alpha: streaming a shard through VMEM once."""
+    return LAUNCH_US + PASS_US
+
+
+def shm_gate_cost(diagonal: bool) -> float:
+    return SHM_DIAG_GATE_US if diagonal else SHM_GATE_US
+
+
+def best_fusion_size() -> int:
+    """Most cost-efficient fusion kernel size (cost per qubit covered)."""
+    return min(range(1, MAX_FUSION_QUBITS + 1), key=lambda k: fusion_cost(k) / k)
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Parameterizable cost model so tests/benches can use synthetic values."""
+
+    pass_us: float = PASS_US
+    mxu_us_per_2k: float = MXU_US_PER_2K
+    launch_us: float = LAUNCH_US
+    shm_gate_us: float = SHM_GATE_US
+    shm_diag_gate_us: float = SHM_DIAG_GATE_US
+    max_fusion_qubits: int = MAX_FUSION_QUBITS
+    max_shm_qubits: int = MAX_SHM_QUBITS
+    io_qubits: int = IO_QUBITS
+
+    def fusion_cost(self, k: int) -> float:
+        if k > self.max_fusion_qubits:
+            return float("inf")
+        return self.launch_us + max(self.pass_us, self.mxu_us_per_2k * (2**k))
+
+    def shm_open_cost(self) -> float:
+        return self.launch_us + self.pass_us
+
+    def shm_gate_cost(self, diagonal: bool) -> float:
+        return self.shm_diag_gate_us if diagonal else self.shm_gate_us
+
+    def kernel_close_cost(self, kind: int, n_qubits: int) -> float:
+        if kind == FUSION:
+            return self.fusion_cost(n_qubits)
+        return self.shm_open_cost()
+
+    def best_fusion_size(self) -> int:
+        return min(
+            range(1, self.max_fusion_qubits + 1), key=lambda k: self.fusion_cost(k) / k
+        )
+
+
+DEFAULT_COST_MODEL = CostModel()

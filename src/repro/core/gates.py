@@ -1,0 +1,232 @@
+"""Gate library: matrices + insularity traits (paper Def. 2).
+
+A gate's unitary is stored as a dense ``2^k x 2^k`` complex ndarray over its
+qubits ``(q_0, ..., q_{k-1})`` where ``q_0`` is the *least-significant* qubit of
+the gate's index space (matching the state-vector bit convention used across
+``repro.sim``).
+
+Insularity (paper Def. 2):
+  * a single-qubit gate's qubit is insular iff its matrix is diagonal or
+    anti-diagonal;
+  * all control qubits of a controlled-U gate are insular;
+  * everything else is non-insular.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+SQ2 = 1.0 / math.sqrt(2.0)
+
+# ---------------------------------------------------------------------------
+# Base 1q matrices
+# ---------------------------------------------------------------------------
+
+I2 = np.eye(2, dtype=np.complex128)
+X = np.array([[0, 1], [1, 0]], dtype=np.complex128)
+Y = np.array([[0, -1j], [1j, 0]], dtype=np.complex128)
+Z = np.array([[1, 0], [0, -1]], dtype=np.complex128)
+H = np.array([[SQ2, SQ2], [SQ2, -SQ2]], dtype=np.complex128)
+S = np.array([[1, 0], [0, 1j]], dtype=np.complex128)
+SDG = S.conj().T
+T = np.array([[1, 0], [0, np.exp(1j * math.pi / 4)]], dtype=np.complex128)
+TDG = T.conj().T
+SX = 0.5 * np.array([[1 + 1j, 1 - 1j], [1 - 1j, 1 + 1j]], dtype=np.complex128)
+
+
+def rx(theta: float) -> np.ndarray:
+    c, s = math.cos(theta / 2), math.sin(theta / 2)
+    return np.array([[c, -1j * s], [-1j * s, c]], dtype=np.complex128)
+
+
+def ry(theta: float) -> np.ndarray:
+    c, s = math.cos(theta / 2), math.sin(theta / 2)
+    return np.array([[c, -s], [s, c]], dtype=np.complex128)
+
+
+def rz(theta: float) -> np.ndarray:
+    return np.array(
+        [[np.exp(-0.5j * theta), 0], [0, np.exp(0.5j * theta)]], dtype=np.complex128
+    )
+
+
+def p(lam: float) -> np.ndarray:
+    return np.array([[1, 0], [0, np.exp(1j * lam)]], dtype=np.complex128)
+
+
+def u3(theta: float, phi: float, lam: float) -> np.ndarray:
+    c, s = math.cos(theta / 2), math.sin(theta / 2)
+    return np.array(
+        [
+            [c, -np.exp(1j * lam) * s],
+            [np.exp(1j * phi) * s, np.exp(1j * (phi + lam)) * c],
+        ],
+        dtype=np.complex128,
+    )
+
+
+def controlled(u: np.ndarray, n_controls: int = 1) -> np.ndarray:
+    """Controlled-U with control qubits as the *most significant* gate qubits.
+
+    Qubit order within the gate: (targets..., controls...): target qubits are the
+    low bits of the 2^k index, control qubits the high bits. The gate acts as U on
+    the subspace where all control bits are 1.
+    """
+    kt = u.shape[0]
+    dim = kt * (2**n_controls)
+    m = np.eye(dim, dtype=np.complex128)
+    m[dim - kt :, dim - kt :] = u
+    return m
+
+
+CX = controlled(X)
+CY = controlled(Y)
+CZ = controlled(Z)
+CCX = controlled(X, 2)
+SWAP = np.array(
+    [[1, 0, 0, 0], [0, 0, 1, 0], [0, 1, 0, 0], [0, 0, 0, 1]], dtype=np.complex128
+)
+
+
+def cp(lam: float) -> np.ndarray:
+    return controlled(p(lam))
+
+
+def crz(theta: float) -> np.ndarray:
+    return controlled(rz(theta))
+
+
+def cry(theta: float) -> np.ndarray:
+    return controlled(ry(theta))
+
+
+def crx(theta: float) -> np.ndarray:
+    return controlled(rx(theta))
+
+
+def rzz(theta: float) -> np.ndarray:
+    # exp(-i theta/2 Z⊗Z): diagonal
+    e = np.exp(-0.5j * theta)
+    f = np.exp(0.5j * theta)
+    return np.diag([e, f, f, e]).astype(np.complex128)
+
+
+def rxx(theta: float) -> np.ndarray:
+    c, s = math.cos(theta / 2), -1j * math.sin(theta / 2)
+    m = np.zeros((4, 4), dtype=np.complex128)
+    for i in range(4):
+        m[i, i] = c
+        m[i, i ^ 3] = s
+    return m
+
+
+def ryy(theta: float) -> np.ndarray:
+    c = math.cos(theta / 2)
+    s = 1j * math.sin(theta / 2)
+    m = np.zeros((4, 4), dtype=np.complex128)
+    diag_s = [s, -s, -s, s]
+    for i in range(4):
+        m[i, i] = c
+        m[i, i ^ 3] = diag_s[i]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Insularity analysis
+# ---------------------------------------------------------------------------
+
+
+def is_diagonal(m: np.ndarray, tol: float = 1e-12) -> bool:
+    return bool(np.allclose(m - np.diag(np.diag(m)), 0, atol=tol))
+
+
+def is_antidiagonal(m: np.ndarray, tol: float = 1e-12) -> bool:
+    return bool(np.allclose(m - np.fliplr(np.diag(np.diag(np.fliplr(m)))), 0, atol=tol))
+
+
+def insular_mask(matrix: np.ndarray, n_controls: int = 0) -> Tuple[bool, ...]:
+    """Per-qubit insularity for a gate given its matrix and #control qubits.
+
+    Gate qubit order is (targets..., controls...). Control qubits are always
+    insular. For the target part: if there is a single target qubit, it is
+    insular iff the target unitary is (anti-)diagonal. For multi-target gates a
+    target qubit q is insular iff, for every non-zero entry U[r, c], bit q of r
+    is a function of bit q of c ONLY and that function is either identity
+    (diagonal in q) or negation (anti-diagonal in q) consistently, and the
+    remaining action factorizes — we use the conservative per-bit test below.
+    """
+    k = int(round(math.log2(matrix.shape[0])))
+    kt = k - n_controls
+    mask = [False] * k
+    for qc in range(kt, k):
+        mask[qc] = True
+    # Per-target-bit conservative test: qubit q (bit position q within the gate
+    # index) is insular iff every nonzero U[r, c] has r_q == c_q (diagonal-in-q)
+    # or every nonzero has r_q != c_q (antidiagonal-in-q).
+    rows, cols = np.nonzero(np.abs(matrix) > 1e-12)
+    for q in range(kt):
+        rb = (rows >> q) & 1
+        cb = (cols >> q) & 1
+        if np.all(rb == cb) or np.all(rb != cb):
+            mask[q] = True
+    return tuple(mask)
+
+
+# ---------------------------------------------------------------------------
+# Named gate registry (for circuit generators / (de)serialization)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GateDef:
+    name: str
+    n_qubits: int
+    n_params: int
+    n_controls: int
+    fn: Callable[..., np.ndarray]
+
+
+def _const(m: np.ndarray) -> Callable[..., np.ndarray]:
+    return lambda: m
+
+
+GATE_DEFS: Dict[str, GateDef] = {
+    "i": GateDef("i", 1, 0, 0, _const(I2)),
+    "x": GateDef("x", 1, 0, 0, _const(X)),
+    "y": GateDef("y", 1, 0, 0, _const(Y)),
+    "z": GateDef("z", 1, 0, 0, _const(Z)),
+    "h": GateDef("h", 1, 0, 0, _const(H)),
+    "s": GateDef("s", 1, 0, 0, _const(S)),
+    "sdg": GateDef("sdg", 1, 0, 0, _const(SDG)),
+    "t": GateDef("t", 1, 0, 0, _const(T)),
+    "tdg": GateDef("tdg", 1, 0, 0, _const(TDG)),
+    "sx": GateDef("sx", 1, 0, 0, _const(SX)),
+    "rx": GateDef("rx", 1, 1, 0, rx),
+    "ry": GateDef("ry", 1, 1, 0, ry),
+    "rz": GateDef("rz", 1, 1, 0, rz),
+    "p": GateDef("p", 1, 1, 0, p),
+    "u3": GateDef("u3", 1, 3, 0, u3),
+    "cx": GateDef("cx", 2, 0, 1, _const(CX)),
+    "cy": GateDef("cy", 2, 0, 1, _const(CY)),
+    "cz": GateDef("cz", 2, 0, 1, _const(CZ)),
+    "cp": GateDef("cp", 2, 1, 1, cp),
+    "crx": GateDef("crx", 2, 1, 1, crx),
+    "cry": GateDef("cry", 2, 1, 1, cry),
+    "crz": GateDef("crz", 2, 1, 1, crz),
+    "swap": GateDef("swap", 2, 0, 0, _const(SWAP)),
+    "rzz": GateDef("rzz", 2, 1, 0, rzz),
+    "rxx": GateDef("rxx", 2, 1, 0, rxx),
+    "ryy": GateDef("ryy", 2, 1, 0, ryy),
+    "ccx": GateDef("ccx", 3, 0, 2, _const(CCX)),
+}
+
+
+def gate_matrix(name: str, params: Sequence[float] = ()) -> np.ndarray:
+    gd = GATE_DEFS[name]
+    if len(params) != gd.n_params:
+        raise ValueError(f"gate {name} expects {gd.n_params} params, got {len(params)}")
+    return gd.fn(*params)

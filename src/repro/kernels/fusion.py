@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused-unitary application (cuQuantum-fusion analogue).
+
+Applies a fused ``2^k``-qubit unitary to a state shard whose k target qubits
+have been transposed to the lowest index bits, i.e. a planar-complex matmul
+
+    out[m, r] = sum_c U[r, c] * s[m, c]        (s: [M, K], K = 2^k)
+
+TPU mapping:
+* K = 128 (k = 7) makes the contraction a native MXU tile — this is why the
+  cost model's sweet spot sits at 7 qubits (see core/cost_model.py);
+* the state streams through VMEM in ``(BLOCK_M, K)`` tiles (double-buffered by
+  the Pallas pipeline); U stays VMEM-resident across the whole grid;
+* complex arithmetic is planar fp32: 4 real matmuls, or 3 with the Karatsuba
+  trick (measured in EXPERIMENTS.md §Perf — trades one matmul for two adds).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel4(sre_ref, sim_ref, ure_ref, uim_ref, ore_ref, oim_ref):
+    sre = sre_ref[...]
+    sim = sim_ref[...]
+    ure_t = ure_ref[...].T
+    uim_t = uim_ref[...].T
+    f32 = jnp.float32
+    ore_ref[...] = (
+        jnp.dot(sre, ure_t, preferred_element_type=f32)
+        - jnp.dot(sim, uim_t, preferred_element_type=f32)
+    )
+    oim_ref[...] = (
+        jnp.dot(sre, uim_t, preferred_element_type=f32)
+        + jnp.dot(sim, ure_t, preferred_element_type=f32)
+    )
+
+
+def _kernel3(sre_ref, sim_ref, ure_ref, uim_ref, ore_ref, oim_ref):
+    # Karatsuba: (a+ib)(c+id) with 3 real products
+    sre = sre_ref[...]
+    sim = sim_ref[...]
+    ure_t = ure_ref[...].T
+    uim_t = uim_ref[...].T
+    f32 = jnp.float32
+    k1 = jnp.dot(sre + sim, ure_t, preferred_element_type=f32)
+    k2 = jnp.dot(sre, uim_t - ure_t, preferred_element_type=f32)
+    k3 = jnp.dot(sim, ure_t + uim_t, preferred_element_type=f32)
+    ore_ref[...] = k1 - k3
+    oim_ref[...] = k1 + k2
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "karatsuba", "interpret"))
+def fused_matmul(
+    sre: jnp.ndarray,
+    sim: jnp.ndarray,
+    ure: jnp.ndarray,
+    uim: jnp.ndarray,
+    *,
+    block_m: int = 512,
+    karatsuba: bool = False,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """sre/sim: [M, K] fp32; ure/uim: [K, K] fp32. Returns planar result."""
+    m, k = sre.shape
+    bm = min(block_m, m)
+    assert m % bm == 0, f"M={m} must be divisible by block_m={bm}"
+    grid = (m // bm,)
+    state_spec = pl.BlockSpec((bm, k), lambda i: (i, 0))
+    u_spec = pl.BlockSpec((k, k), lambda i: (0, 0))
+    body = _kernel3 if karatsuba else _kernel4
+    out_shape = [
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+    ]
+    return tuple(
+        pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[state_spec, state_spec, u_spec, u_spec],
+            out_specs=[state_spec, state_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(sre, sim, ure, uim)
+    )

@@ -1,0 +1,73 @@
+"""jit'd wrappers dispatching state-vector ops to the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernels execute (and are
+validated) on CPU; on a real TPU backend the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fusion import fused_matmul
+from .shm import shm_apply
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _to_planar(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def _choose_block_m(m: int, k_cols: int, target_bytes: int = 1 << 21) -> int:
+    """Pick BLOCK_M so a (BM, K) fp32 tile is ~2 MiB and divides M."""
+    want = max(8, target_bytes // max(k_cols * 4, 1))
+    bm = 1
+    while bm * 2 <= min(want, m):
+        bm *= 2
+    while m % bm:
+        bm //= 2
+    return max(bm, 1)
+
+
+def apply_fused_shard(
+    view: jnp.ndarray, u: jnp.ndarray, local_bits: Sequence[int], karatsuba: bool = False
+) -> jnp.ndarray:
+    """Apply fused unitary ``u`` [K, K] (complex) to a local shard view
+    ((2,)*L complex array) on index bits ``local_bits`` via the Pallas MXU
+    kernel. Transposes the target bits to the lowest positions first."""
+    L = view.ndim
+    k = len(local_bits)
+    lb = list(local_bits)
+    rest = [b for b in range(L - 1, -1, -1) if b not in lb]
+    # axes order: rest (desc) + gate bits desc => flat [M, K] with K-bit j = lb[j]
+    perm = [L - 1 - b for b in rest] + [L - 1 - b for b in reversed(lb)]
+    x = jnp.transpose(view, perm).reshape(1 << (L - k), 1 << k)
+    sre, sim = _to_planar(x)
+    ure, uim = _to_planar(u)
+    bm = _choose_block_m(x.shape[0], x.shape[1])
+    ore, oim = fused_matmul(
+        sre, sim, ure, uim, block_m=bm, karatsuba=karatsuba, interpret=INTERPRET
+    )
+    out = (ore + 1j * oim).astype(view.dtype).reshape([2] * L)
+    inv = np.argsort(perm)
+    return jnp.transpose(out, list(inv))
+
+
+def apply_shm_shard(
+    view: jnp.ndarray,
+    gates: Sequence[Tuple[Tuple[int, ...], np.ndarray]],
+    window_bits: int,
+) -> jnp.ndarray:
+    """Apply a shared-memory kernel (static gate list on the lowest
+    ``window_bits`` bits) to a local shard view."""
+    L = view.ndim
+    a = window_bits
+    x = view.reshape(1 << (L - a), 1 << a)
+    sre, sim = _to_planar(x)
+    bm = _choose_block_m(x.shape[0], x.shape[1], target_bytes=1 << 19)
+    ore, oim = shm_apply(sre, sim, gates, a, block_m=bm, interpret=INTERPRET)
+    return (ore + 1j * oim).astype(view.dtype).reshape((2,) * L)

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder devices.
+
+Per cell this records into benchmarks/dryrun_results/<arch>__<shape>__<mesh>.json:
+  * memory_analysis()  (proves the program fits / reports per-device bytes)
+  * cost_analysis()    (per-device FLOPs & bytes for the roofline)
+  * collective census  (bytes per all-gather/all-reduce/reduce-scatter/
+                        all-to-all/collective-permute from the SPMD HLO)
+  * the derived three-term roofline (see launch/hlo_analysis.py)
+
+Resumable: existing result files are skipped unless --force.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from ..configs.base import SHAPES, input_specs, shape_applicable
+from ..configs.registry import ARCHS, get_arch
+from ..optim import adamw
+from . import hlo_analysis as ha
+from .mesh import make_production_mesh
+from .steps import build_model, jitted_serve_step, jitted_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/dryrun_results")
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             opt_overrides: Optional[Dict] = None) -> Dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    with mesh:
+        # decode steps are latency-bound on tiny per-token tensors: head
+        # padding (which shards attention by heads) adds per-layer TP
+        # collectives that cost more than the replicated compute they remove —
+        # EXPERIMENTS.md §Perf iteration 7. Train/prefill keep padding.
+        model = build_model(cfg, mesh, pad_heads=(shape.kind != "decode"))
+        if shape.kind == "train":
+            opt_cfg = adamw.AdamWConfig(**(opt_overrides or {}))
+            fn, args = jitted_train_step(model, opt_cfg, mesh, shape, multi_pod)
+            model_flops = ha.model_flops_train(cfg, shape)
+        else:
+            fn, args = jitted_serve_step(model, mesh, shape, multi_pod)
+            model_flops = ha.model_flops_serve(cfg, shape)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch_name} x {shape_name} x {'multi' if multi_pod else 'single'}] "
+          f"memory_analysis: {mem}")
+    cost = compiled.cost_analysis()
+    print(f"  cost_analysis (NOTE: counts while bodies once): "
+          f"{ {k: v for k, v in (cost or {}).items() if k in ('flops', 'bytes accessed')} }")
+    hlo = compiled.as_text()
+    rl = ha.roofline_from_hlo(hlo, n_chips, model_flops=model_flops)
+
+    mem_d = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(mem, attr):
+                mem_d[attr] = int(getattr(mem, attr))
+    return {
+        "status": "ok",
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory_analysis": mem_d or str(mem),
+        "cost_flops": float((cost or {}).get("flops", 0.0)),
+        "cost_bytes": float((cost or {}).get("bytes accessed", 0.0)),
+        "roofline": rl.as_dict(),
+    }
+
+
+def cell_path(results_dir, arch, shape, multi_pod):
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(results_dir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--results-dir", default=os.path.normpath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.results_dir, exist_ok=True)
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                path = cell_path(args.results_dir, arch, shape, mp)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            continue
+                t0 = time.time()
+                try:
+                    res = run_cell(arch, shape, mp)
+                except Exception as e:  # record failure, keep sweeping
+                    res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                res["wall_s"] = time.time() - t0
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                tag = res["status"].upper()
+                if tag == "OK":
+                    n_ok += 1
+                    dom = res["roofline"]["dominant"]
+                    print(f"OK   {arch} {shape} {'multi' if mp else 'single'} "
+                          f"({res['wall_s']:.0f}s) dominant={dom}")
+                elif tag == "SKIPPED":
+                    n_skip += 1
+                    print(f"SKIP {arch} {shape}: {res['reason']}")
+                else:
+                    n_fail += 1
+                    print(f"FAIL {arch} {shape} {'multi' if mp else 'single'}: "
+                          f"{res['error']}")
+    print(f"dry-run done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,475 @@
+"""HLO analysis: trip-count-aware FLOP / byte / collective census + roofline.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a while
+loop's body ONCE, so scan-over-layers models (every model here) under-count
+FLOPs and collective traffic by the layer count. This module parses the
+post-optimization SPMD HLO, builds the computation call graph (while bodies,
+fusions, calls), extracts loop trip counts from the loop conditions, and
+accumulates per-device:
+
+* ``flops``   — 2·|result|·K per dot (×4 for complex), × multiplier;
+* ``bytes``   — operand+result bytes of every kernel-granularity op (fusion /
+  dot / elementwise / data-movement), × multiplier — an HBM-traffic proxy at
+  the compiler's fusion granularity;
+* per-collective ``count/bytes/traffic`` with ring-factor weighting.
+
+All numbers are per-device (the HLO is the partitioned per-device module).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# per-device traffic factor relative to the result buffer size
+_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# Ops counted toward HBM traffic. The CPU backend fuses far less than TPU,
+# so counting *every* op would bill VMEM-resident elementwise chains as HBM
+# traffic; we count kernel-granularity ops only (matmuls, fusions, data
+# movement, reductions) — the TPU model where elementwise work fuses into
+# its producer/consumer.
+_COUNT_BYTES = {
+    "dot", "fusion", "copy", "copy-start", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "reduce", "sort",
+    "convolution", "concatenate", "pad", "reverse", "cholesky",
+    "triangular-solve", "rng", "reduce-window", "select-and-scatter",
+}
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_array(t: str) -> Optional[Tuple[str, List[int]]]:
+    m = _ARRAY_RE.search(t)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class _Op:
+    name: str
+    type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)(?:\.clone)?\s*(\([^)]*\))?\s*->.*{\s*$|^(ENTRY\s+)?%?([\w\.\-]+)\s+{\s*$")
+_REF_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_type_and_op(rest: str) -> Tuple[str, str, str]:
+    """rest: everything after '= '. Returns (type, opcode, tail)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rest[: i + 1]
+                    tail = rest[i + 1:].strip()
+                    break
+        else:
+            return rest, "", ""
+    else:
+        sp = rest.find(" ")
+        type_str = rest[:sp] if sp > 0 else rest
+        tail = rest[sp + 1:].strip() if sp > 0 else ""
+    m = re.match(r"([\w\-]+)\(", tail)
+    opcode = m.group(1) if m else tail.split("(")[0].strip()
+    return type_str, opcode, tail
+
+
+def parse_hlo(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            if line.startswith("}"):
+                cur = None
+                continue
+            if "{" in line and ("->" in line or line.rstrip().endswith("{")):
+                m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", line)
+                if m and not m.group(2).isdigit():
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if cur is None or "=" not in line:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name = mo.group(1)
+        rest = line[mo.end():]
+        type_str, opcode, tail = _parse_type_and_op(rest)
+        # operands: refs inside the first (...) after opcode; attrs = full tail
+        paren = tail.find("(")
+        operands: List[str] = []
+        if paren >= 0:
+            depth = 0
+            for i in range(paren, len(tail)):
+                if tail[i] == "(":
+                    depth += 1
+                elif tail[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        operands = _REF_RE.findall(tail[paren: i + 1])
+                        break
+        comps[cur].append(_Op(name, type_str, opcode, operands, tail))
+    comps["__entry__"] = comps.get(entry, [])  # type: ignore[arg-type]
+    if entry:
+        comps["__entry_name__"] = entry  # type: ignore[assignment]
+    return comps
+
+
+def _trip_count(cond_ops: List[_Op]) -> int:
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.attrs or "")
+            # constants also appear as `constant(28)` inside the op tail
+            if m:
+                best = max(best, int(m.group(1)))
+    # fallback: constants live in the tail we stored in attrs of other ops
+    return best
+
+
+def analyze_hlo(text: str) -> Dict:
+    comps = parse_hlo(text)
+    entry_name = comps.get("__entry_name__")
+    if not isinstance(entry_name, str):
+        entry_name = None
+    op_lists = {k: v for k, v in comps.items() if isinstance(v, list) and not k.startswith("__")}
+
+    # call-graph edges (caller -> callee, weight = trips for while bodies)
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in op_lists}
+    local_t: Dict[str, float] = {c: 1.0 for c in op_lists}  # immediate loop trips
+    fusion_internal: Dict[str, bool] = {c: False for c in op_lists}
+    for cname, ops in op_lists.items():
+        for op in ops:
+            attrs = op.attrs or ""
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", attrs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", attrs)
+                trips = 1
+                if mc and mc.group(1) in op_lists:
+                    trips = _cond_trips(op_lists[mc.group(1)])
+                if mb and mb.group(1) in op_lists:
+                    edges[cname].append((mb.group(1), float(trips)))
+                    local_t[mb.group(1)] = max(local_t[mb.group(1)], float(trips))
+            else:
+                for key in ("calls=", "to_apply=", "body=", "condition="):
+                    for mm in re.finditer(key + r"%?([\w\.\-]+)", attrs):
+                        tgt = mm.group(1)
+                        if tgt in op_lists:
+                            edges[cname].append((tgt, 1.0))
+                            if op.opcode == "fusion" and key == "calls=":
+                                fusion_internal[tgt] = True
+
+    # multipliers: sum over call sites, DAG accumulation from the entry
+    mult: Dict[str, float] = {c: 0.0 for c in op_lists}
+    if entry_name and entry_name in mult:
+        mult[entry_name] = 1.0
+    indeg: Dict[str, int] = {c: 0 for c in op_lists}
+    for c, outs in edges.items():
+        for t, _ in outs:
+            indeg[t] += 1
+    from collections import deque
+
+    q = deque([c for c in op_lists if indeg[c] == 0])
+    while q:
+        c = q.popleft()
+        for t, w in edges[c]:
+            mult[t] += mult[c] * w
+            indeg[t] -= 1
+            if indeg[t] == 0:
+                q.append(t)
+
+    # "fused" tier: ops that materialize HBM traffic even under perfect TPU
+    # fusion (matmuls, data movement, collectives); the full _COUNT_BYTES set
+    # additionally bills fusion-granularity elementwise chains (upper bound).
+    _FUSED_TIER = {"dot", "copy", "copy-start", "dynamic-slice",
+                   "dynamic-update-slice", "gather", "scatter", "sort",
+                   "convolution", "concatenate"}
+
+    flops = 0.0
+    byts_upper = 0.0
+    byts_fused = 0.0
+    colls: Dict[str, Dict[str, float]] = {}
+    for cname, ops in op_lists.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        sym = {op.name: op.type for op in ops}
+        # Loop-carried buffers (scan xs/ys stacks, remat-saved activations,
+        # stacked layer params) are read/written one SLICE per iteration:
+        # amortize them by the immediate loop trip count. Carried = reachable
+        # from the body's parameter tuple via gte/bitcast/copy chains.
+        lt = local_t.get(cname, 1.0)
+        carried: set = set()
+        if lt > 1:
+            for op in ops:
+                if op.opcode == "parameter":
+                    carried.add(op.name)
+                elif op.opcode in ("get-tuple-element", "bitcast", "copy",
+                                   "reshape", "transpose") and op.operands \
+                        and op.operands[0] in carried:
+                    carried.add(op.name)
+
+        def op_bytes(op):
+            total = 0.0
+            for o in op.operands:
+                b = _type_bytes(sym.get(o, ""))
+                total += (b / lt) if o in carried else b
+            b = _type_bytes(op.type)
+            if op.opcode == "dynamic-update-slice" and op.operands \
+                    and op.operands[0] in carried:
+                b /= lt  # in-place slice write into a carried buffer
+            total += b
+            return total
+
+        count_bytes_here = not fusion_internal.get(cname, False)
+        for op in ops:
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if op.opcode.endswith("-done"):
+                    continue  # avoid double count of start/done pairs
+                b = _type_bytes(op.type)
+                # The CPU backend canonicalizes bf16 arithmetic to f32, so
+                # activation collectives appear at 2x their TPU width; the
+                # bf16-corrected tier halves f32 collective payloads (what a
+                # bf16-compute model moves on real hardware).
+                b16 = b / 2 if ("f32[" in op.type and "bf16" not in op.type) else b
+                d = colls.setdefault(base, {"count": 0, "bytes": 0.0,
+                                            "traffic": 0.0, "traffic_bf16": 0.0})
+                d["count"] += m
+                d["bytes"] += b * m
+                d["traffic"] += b * _FACTOR[base] * m
+                d["traffic_bf16"] += b16 * _FACTOR[base] * m
+                byts_upper += b * 2 * m
+                byts_fused += b * 2 * m
+                continue
+            if op.opcode == "dot":
+                res = _first_array(op.type)
+                lhs_t = sym.get(op.operands[0], "") if op.operands else ""
+                lhs = _first_array(lhs_t)
+                mm = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.attrs or "")
+                k = 1
+                if lhs and mm:
+                    for d_ in mm.group(1).split(","):
+                        if d_:
+                            k *= lhs[1][int(d_)] if int(d_) < len(lhs[1]) else 1
+                if res:
+                    nel = 1
+                    for d_ in res[1]:
+                        nel *= d_
+                    f = 2.0 * nel * k
+                    if res[0] in ("c64", "c128"):
+                        f *= 4
+                    flops += f * m
+                if count_bytes_here:
+                    b = op_bytes(op)
+                    byts_upper += b * m
+                    byts_fused += b * m
+                continue
+            if op.opcode not in _COUNT_BYTES or not count_bytes_here:
+                continue
+            b = op_bytes(op) * m
+            byts_upper += b
+            if op.opcode in _FUSED_TIER:
+                byts_fused += b
+
+    coll_traffic = sum(d["traffic"] for d in colls.values())
+    coll_traffic_bf16 = sum(d["traffic_bf16"] for d in colls.values())
+    return {"flops": flops, "bytes": byts_fused, "bytes_upper": byts_upper,
+            "collectives": colls, "coll_traffic": coll_traffic,
+            "coll_traffic_bf16": coll_traffic_bf16,
+            "multipliers": {k: v for k, v in mult.items() if v > 1.5}}
+
+
+def _cond_trips(cond_ops: List[_Op]) -> int:
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.attrs or "")
+            if m:
+                best = max(best, int(m.group(1)))
+        # constants may appear as the full tail 'constant(28)' captured in attrs
+        m = re.search(r"constant\((\d+)\)", op.attrs or "")
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+# --------------------------------------------------------------------------
+# Roofline
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class HardwareSpec:
+    """TPU v5e (assignment constants)."""
+
+    peak_flops: float = 197e12  # bf16 / chip
+    fp32_flops: float = 49.25e12  # MXU fp32 (complex sim)
+    hbm_bw: float = 819e9  # bytes/s / chip
+    ici_bw: float = 50e9  # bytes/s/link
+    hbm_bytes: float = 16e9
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_detail: Dict[str, Dict[str, float]]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    hbm_bytes_upper: float = 0.0
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_upper": self.hbm_bytes_upper,
+            "coll_bytes": self.coll_bytes,
+            "coll_detail": self.coll_detail,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline_from_hlo(
+    hlo_text: str,
+    n_chips: int,
+    hw: HardwareSpec = HardwareSpec(),
+    model_flops: float = 0.0,
+    peak: Optional[float] = None,
+) -> Roofline:
+    a = analyze_hlo(hlo_text)
+    peak = peak or hw.peak_flops
+    t_comp = a["flops"] / peak
+    t_mem = a["bytes"] / hw.hbm_bw
+    t_coll = a.get("coll_traffic_bf16", a["coll_traffic"]) / hw.ici_bw
+    dom = max(
+        (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    per_dev_model = model_flops / max(n_chips, 1)
+    return Roofline(
+        flops=a["flops"],
+        hbm_bytes=a["bytes"],
+        hbm_bytes_upper=a.get("bytes_upper", a["bytes"]),
+        coll_bytes=a.get("coll_traffic_bf16", a["coll_traffic"]),
+        coll_detail=a["collectives"],
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        dominant=dom,
+        model_flops=model_flops,
+        useful_ratio=(per_dev_model / a["flops"]) if a["flops"] else 0.0,
+    )
+
+
+def model_flops_train(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) global FLOPs for one train step."""
+    n_active = active_params(cfg)
+    tokens = shape.seq_len * shape.global_batch
+    return 6.0 * n_active * tokens
+
+
+def model_flops_serve(cfg, shape) -> float:
+    n_active = active_params(cfg)
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # one token per sequence
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE counts top-k + shared experts)."""
+    d = cfg.d_model
+    total = 2 * cfg.padded_vocab * d  # embed + head
+    kinds = cfg.layer_kinds()
+    for kind in kinds:
+        if kind.startswith("ssm"):
+            d_in = cfg.ssm_expand * d
+            nheads = d_in // cfg.ssm_headdim
+            total += 2 * d * d_in + 2 * d * cfg.ssm_state + d * nheads + d_in * d
+        elif cfg.mla:
+            h = cfg.n_heads
+            r = cfg.kv_lora_rank
+            qdim = h * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+            total += (cfg.q_lora_rank * qdim + d * cfg.q_lora_rank
+                      if cfg.q_lora_rank else d * qdim)
+            total += d * r + d * cfg.qk_rope_head_dim
+            total += r * h * cfg.qk_nope_head_dim + r * h * cfg.v_head_dim
+            total += h * cfg.v_head_dim * d
+        else:
+            hd = cfg.hd
+            total += d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+            total += cfg.n_heads * hd * d
+        if "+cross" in kind:
+            hd = cfg.hd
+            total += 2 * (d * cfg.n_heads * hd + d * cfg.n_kv_heads * hd)
+        if "+moe" in kind:
+            f = cfg.d_ff_expert
+            total += 3 * d * f * (cfg.experts_top_k + cfg.n_shared_experts)
+        elif cfg.d_ff:  # dense MLP (incl. jamba's non-MoE layers)
+            nfac = 3 if cfg.act == "swiglu" else 2
+            total += nfac * d * cfg.d_ff
+    return float(total)
+
+
+# kept for backward compatibility with earlier result files
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_hlo(hlo_text)["collectives"]

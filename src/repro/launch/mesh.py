@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (host) devices exist — smoke tests."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

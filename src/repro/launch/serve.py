@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill + greedy decode loop.
+
+Example (CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --batch 4 --prompt-len 32 --gen-len 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import get_arch
+from .mesh import make_host_mesh
+from .steps import build_model, make_decode_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(data=args.data_par, model=args.model_par)
+    model = build_model(cfg, mesh, remat=False)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    B, P, G = args.batch, args.prompt_len, args.gen_len
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size, dtype=jnp.int32)
+    extras = None
+    if cfg.family == "audio":
+        extras = {"frames": jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model),
+                                              jnp.bfloat16)}
+    if cfg.family == "vlm":
+        extras = {"patches": jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model),
+                                               jnp.bfloat16)}
+
+    prefill = jax.jit(lambda p, t: model.prefill(p, t, extras=extras,
+                                                 cache_len=P + G))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(2,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    out = [tok]
+    t0 = time.time()
+    for _ in range(G - 1):
+        tok, cache = decode(params, tok, cache, extras) if extras else \
+            decode(params, tok, cache)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"prefill: {B}x{P} tokens in {t_prefill:.3f}s "
+          f"({B*P/max(t_prefill, 1e-9):,.0f} tok/s)")
+    print(f"decode: {B}x{G-1} tokens in {t_decode:.3f}s "
+          f"({B*(G-1)/max(t_decode, 1e-9):,.0f} tok/s)")
+    print("sample generations (token ids):")
+    for row in np.asarray(gen)[: min(B, 3)]:
+        print("  ", row[:16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

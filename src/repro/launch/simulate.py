@@ -1,0 +1,88 @@
+"""End-to-end quantum circuit simulation driver (the paper's workload).
+
+Examples (CPU):
+  PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 20 --L 20
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 22 \
+      --L 19 --R 2 --G 1 --executor shardmap
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..core.generators import FAMILIES
+from ..core.partition import partition
+from ..sim.statevector import fidelity, simulate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--circuit", default="qft", choices=sorted(FAMILIES))
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--L", type=int, default=0, help="local qubits (0: n-R-G)")
+    ap.add_argument("--R", type=int, default=0)
+    ap.add_argument("--G", type=int, default=0)
+    ap.add_argument("--executor", default="pjit",
+                    choices=["pjit", "shardmap", "offload", "pergate"])
+    ap.add_argument("--staging", default="ilp", choices=["ilp", "greedy"])
+    ap.add_argument("--kernelizer", default="dp", choices=["dp", "ordered", "greedy"])
+    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--check", action="store_true", help="fidelity vs dense ref")
+    args = ap.parse_args(argv)
+
+    n = args.n
+    L = args.L or (n - args.R - args.G)
+    circ = FAMILIES[args.circuit](n)
+    print(f"{args.circuit}(n={n}): {circ.n_gates} gates; L/R/G = {L}/{args.R}/{args.G}")
+
+    t0 = time.time()
+    plan = partition(circ, L, args.R, args.G,
+                     staging_method=args.staging, kernelize_method=args.kernelizer)
+    print(f"partition: {plan.n_stages} stages, kernel cost {plan.total_kernel_cost:,.0f} us"
+          f" (preprocess {plan.preprocess_time_s:.2f}s)")
+
+    t0 = time.time()
+    if args.executor == "pjit":
+        from ..sim.executor import StagedExecutor
+
+        # single-array pjit path; pass a mesh when enough devices exist
+        mesh = None
+        if args.R + args.G > 0 and len(jax.devices()) >= (1 << (args.R + args.G)):
+            rd = 1 << (args.R // 2)
+            rm = 1 << (args.R - args.R // 2)
+            mesh = jax.make_mesh((1 << args.G, rd, rm), ("pod", "data", "model"))
+        ex = StagedExecutor(circ, plan, mesh=mesh)
+        out = ex.run()
+    elif args.executor == "shardmap":
+        from ..sim.shardmap_executor import ShardMapExecutor
+
+        ex = ShardMapExecutor(circ, plan, use_pallas=args.pallas)
+        out = ex.run()
+    elif args.executor == "offload":
+        from ..sim.offload import OffloadedExecutor
+
+        ex = OffloadedExecutor(circ, plan)
+        out = ex.run()
+    else:
+        from ..sim.offload import PerGateOffloadExecutor
+
+        ex = PerGateOffloadExecutor(circ, L)
+        out = ex.run()
+    out = np.asarray(jax.block_until_ready(out)) if not isinstance(out, np.ndarray) else out
+    dt = time.time() - t0
+    print(f"simulated in {dt:.3f}s ({circ.n_gates / dt:,.0f} gates/s, "
+          f"{2**n / dt / 1e6:,.1f} Mamps/s)")
+
+    if args.check and n <= 24:
+        ref = simulate(circ)
+        print(f"fidelity vs dense reference: {fidelity(out, ref):.6f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

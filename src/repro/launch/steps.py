@@ -1,0 +1,207 @@
+"""Step builders: jitted train / prefill / decode steps with production
+shardings. Shared by launch/train.py, launch/serve.py and launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig, input_specs
+from ..models.sharding import batch_shardings, cache_shardings, params_shardings
+from ..models.transformer import Model
+from ..optim import adamw
+
+
+def data_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def pad_heads_for_tp(cfg: ArchConfig, tp: int) -> ArchConfig:
+    """Pad the query-head count to a multiple of the TP width so attention
+    shards instead of replicating (Megatron-style padding; the extra heads
+    are real trainable capacity, ~zero at the roofline when sharded vs the
+    16x replication they replace). head_dim is frozen first so padding
+    doesn't change it."""
+    import dataclasses
+
+    if cfg.n_heads == 0 or tp <= 1 or cfg.mla:
+        return cfg
+    out = cfg
+    if cfg.n_heads % tp != 0:
+        padded = ((cfg.n_heads + tp - 1) // tp) * tp
+        out = dataclasses.replace(out, head_dim=out.hd, n_heads=padded)
+    # fused QKV only when the fused head dim still shards over TP
+    if (out.n_heads + 2 * out.n_kv_heads) % tp != 0:
+        out = dataclasses.replace(out, qkv_fused=False)
+    return out
+
+
+def build_model(cfg: ArchConfig, mesh: Optional[Mesh], remat: bool = True,
+                pad_heads: bool = True) -> Model:
+    """``pad_heads=False`` selects the decode parallelism policy: no head
+    padding AND no QKV fusion — single-token steps are latency-bound, and
+    both transformations add per-layer resharding collectives that cost more
+    than the replicated compute they remove (EXPERIMENTS.md §Perf iter. 7)."""
+    import dataclasses
+
+    axes = data_axes_for(mesh) if mesh is not None else ("data",)
+    if mesh is not None and "model" in mesh.axis_names:
+        if pad_heads:
+            cfg = pad_heads_for_tp(cfg, mesh.shape["model"])
+        elif not cfg.mla and cfg.n_heads:
+            cfg = dataclasses.replace(cfg, qkv_fused=False)
+    return Model(cfg, mesh=mesh, data_axes=axes, remat=remat)
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: adamw.AdamWConfig,
+    microbatches: int = 1,
+):
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                params, batch
+            )
+        else:
+            def reshape_mb(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mbs = jax.tree.map(reshape_mb, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(model.loss, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b_: a + b_, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(accum, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"ce_loss": loss}
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k in ("frames", "patches")}
+        logits, cache = model.prefill(params, batch["tokens"], extras=extras or None)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, cache, extras=None):
+        logits, cache = model.decode_step(params, tokens, cache, extras=extras)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return decode_step
+
+
+# ------------------------------------------------------------------ dry-run
+
+
+def abstract_state(model: Model, opt_cfg: Optional[adamw.AdamWConfig] = None):
+    """Abstract params (and optimizer state) via eval_shape — no allocation."""
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = None
+    if opt_cfg is not None:
+        opt_shape = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), params_shape)
+    return params_shape, opt_shape
+
+
+def jitted_train_step(
+    model: Model, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
+    shape: ShapeConfig, multi_pod: bool, microbatches: int = 1,
+):
+    """Returns (jitted fn, (params_shape, opt_shape, batch_shape)) ready to
+    ``.lower(...)`` with abstract inputs."""
+    params_shape, opt_shape = abstract_state(model, opt_cfg)
+    pspec = params_shardings(mesh, params_shape, multi_pod)
+    ospec = jax.tree.map(
+        lambda s: s, params_shardings(mesh, opt_shape, multi_pod)
+    )
+    batch_shape = dict(input_specs(model.cfg, shape))
+    bspec = batch_shardings(mesh, batch_shape, multi_pod)
+    fn = jax.jit(
+        make_train_step(model, opt_cfg, microbatches),
+        in_shardings=(pspec, ospec, bspec),
+        donate_argnums=(0, 1),
+    )
+
+    def attach(shapes, specs):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes, specs,
+        )
+
+    args = (attach(params_shape, pspec), attach(opt_shape, ospec),
+            attach(batch_shape, bspec))
+    return fn, args
+
+
+def jitted_serve_step(
+    model: Model, mesh: Mesh, shape: ShapeConfig, multi_pod: bool,
+):
+    """Prefill (kind='prefill') or single-token decode (kind='decode')."""
+    params_shape, _ = abstract_state(model)
+    pspec = params_shardings(mesh, params_shape, multi_pod)
+    batch_shape = dict(input_specs(model.cfg, shape))
+    bspec = batch_shardings(mesh, batch_shape, multi_pod)
+
+    def attach(shapes, specs):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes, specs,
+        )
+
+    if shape.kind == "prefill":
+        fn = jax.jit(make_prefill_step(model), in_shardings=(pspec, bspec))
+        return fn, (attach(params_shape, pspec), attach(batch_shape, bspec))
+
+    # decode: cache of length seq_len, one new token
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    cspec = cache_shardings(mesh, cache_shape, multi_pod)
+    extras_shape = {k: v for k, v in batch_shape.items() if k in ("frames", "patches")}
+    espec = {k: bspec[k] for k in extras_shape}
+
+    step = make_decode_step(model)
+
+    if extras_shape:
+        fn = jax.jit(
+            lambda p, t, c, e: step(p, t, c, e),
+            in_shardings=(pspec, bspec["tokens"], cspec, espec),
+            donate_argnums=(2,),
+        )
+        args = (attach(params_shape, pspec), attach({"tokens": batch_shape["tokens"]},
+                {"tokens": bspec["tokens"]})["tokens"],
+                attach(cache_shape, cspec), attach(extras_shape, espec))
+    else:
+        fn = jax.jit(
+            lambda p, t, c: step(p, t, c),
+            in_shardings=(pspec, bspec["tokens"], cspec),
+            donate_argnums=(2,),
+        )
+        args = (attach(params_shape, pspec),
+                attach({"tokens": batch_shape["tokens"]},
+                       {"tokens": bspec["tokens"]})["tokens"],
+                attach(cache_shape, cspec))
+    return fn, args

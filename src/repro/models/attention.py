@@ -1,0 +1,300 @@
+"""Attention: GQA with chunked (flash-style) online-softmax, decode with KV
+cache, DeepSeek MLA, and cross-attention.
+
+The chunked implementation never materializes the [S, S] score matrix: the
+query sequence is processed in blocks with a streaming softmax over KV blocks
+(lax.scan), which keeps peak memory O(S * block) — required for the
+prefill_32k shape and the train_4k backward pass.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import apply_rope, dense_init, rope_freqs
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # [B, Sq, H, D]
+    k: jnp.ndarray,  # [B, Sk, H, D]   (kv heads pre-repeated to H)
+    v: jnp.ndarray,  # [B, Sk, H, Dv]
+    causal: bool = True,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash-style attention; returns [B, Sq, H, Dv].
+
+    KV heads are repeated to the query head count *before* this call (a
+    broadcast, so no HBM cost pre-fusion): with equal head axes every einsum
+    shards cleanly over ('model' on H, DP on B) under GSPMD — grouped
+    (hkv, rep) layouts block head sharding whenever hkv < mesh model size.
+    """
+    b, sq, h, d = q.shape
+    sk, dv = v.shape[1], v.shape[3]
+    scale = 1.0 / math.sqrt(d)
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+    sq_p = (sq + qb - 1) // qb * qb
+    sk_p = (sk + kb - 1) // kb * kb
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq, nk = sq_p // qb, sk_p // kb
+
+    qc = qp.reshape(b, nq, qb, h, d)
+    kc = kp.reshape(b, nk, kb, h, d)
+    vc = vp.reshape(b, nk, kb, h, dv)
+
+    q_pos = q_offset + jnp.arange(sq_p).reshape(nq, qb)
+    k_pos = jnp.arange(sk_p).reshape(nk, kb)
+    k_valid = (jnp.arange(sk_p) < sk).reshape(nk, kb)
+
+    def per_qblock(qi, q_blk):
+        # q_blk: [B, qb, H, D] fp32
+        def kv_step(carry, inp):
+            acc, m, denom = carry
+            k_blk, v_blk, kpos, kvalid = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk) * scale
+            mask = kvalid[None, None, None, :]
+            if causal:
+                mask = mask & (q_pos[qi][None, None, :, None] >= kpos[None, None, None, :])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            denom = denom * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((b, h, qb, dv), dtype=jnp.float32)
+        m0 = jnp.full((b, h, qb), NEG_INF, dtype=jnp.float32)
+        d0 = jnp.zeros((b, h, qb), dtype=jnp.float32)
+        (acc, m, denom), _ = lax.scan(
+            kv_step,
+            (acc0, m0, d0),
+            (jnp.moveaxis(kc, 1, 0).astype(jnp.float32),
+             jnp.moveaxis(vc, 1, 0).astype(jnp.float32),
+             k_pos, k_valid),
+        )
+        return acc / jnp.maximum(denom, 1e-30)[..., None]  # [B, H, qb, Dv]
+
+    outs = lax.map(lambda qi: per_qblock(qi, qc[:, qi].astype(jnp.float32)),
+                   jnp.arange(nq))
+    # outs: [nq, B, H, qb, Dv] -> [B, Sq, H, Dv]
+    out = jnp.transpose(outs, (1, 0, 3, 2, 4)).reshape(b, sq_p, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, D]
+    k_cache: jnp.ndarray,  # [B, S, H, D]   (kv heads pre-repeated to H)
+    v_cache: jnp.ndarray,  # [B, S, H, Dv]
+    cache_len,  # int or [B] array: valid prefix length
+) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    s, dv = v_cache.shape[1], v_cache.shape[3]
+    scale = 1.0 / math.sqrt(d)
+    qh = q.reshape(b, h, d)
+    scores = jnp.einsum("bhd,bshd->bhs", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    if isinstance(cache_len, int) or jnp.ndim(cache_len) == 0:
+        mask = pos < cache_len
+        mask = mask[None, None, :]
+    else:
+        mask = pos[None, :] < cache_len[:, None]
+        mask = mask[:, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- GQA
+
+
+def gqa_params(key, cfg, dtype=jnp.float32) -> Dict:
+    """Fused QKV when the fused head dim divides the TP width: one GEMM
+    forward and ONE (partial-sum) all-reduce for dx in backward, vs three for
+    separate q/k/v weights. Falls back to wq + fused wkv otherwise
+    (EXPERIMENTS.md §Perf)."""
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 3)
+    p: Dict = {}
+    if cfg.qkv_fused:
+        p["wqkv"] = dense_init(ks[0], (d, hq + 2 * hkv, hd), 0, dtype)
+        if cfg.qkv_bias:
+            p["bqkv"] = jnp.zeros((hq + 2 * hkv, hd), dtype)
+    else:
+        p["wq"] = dense_init(ks[0], (d, hq, hd), 0, dtype)
+        p["wkv"] = dense_init(ks[1], (d, 2 * hkv, hd), 0, dtype)
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((hq, hd), dtype)
+            p["bkv"] = jnp.zeros((2 * hkv, hd), dtype)
+    p["wo"] = dense_init(ks[2], (hq, hd, d), None, dtype)
+    return p
+
+
+def gqa_apply(
+    p: Dict,
+    x: jnp.ndarray,  # [B, S, D]
+    cfg,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,  # {"k": [B, C, Hkv, hd], "v": ..., "len": int32}
+    kv_input: Optional[jnp.ndarray] = None,  # cross-attention source
+    mode: str = "train",
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    inv, rot = rope_freqs(cfg.hd, cfg.rope_theta, cfg.partial_rotary)
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    src = x if kv_input is None else kv_input
+    if "wqkv" in p:
+        if kv_input is None:
+            qkv = jnp.einsum("bsd,dhk->bshk", x, p["wqkv"], preferred_element_type=x.dtype)
+            if "bqkv" in p:
+                qkv = qkv + p["bqkv"]
+            q, k, v = jnp.split(qkv, [hq, hq + hkv], axis=2)
+        else:
+            wq, wk, wv = jnp.split(p["wqkv"], [hq, hq + hkv], axis=1)
+            q = jnp.einsum("bsd,dhk->bshk", x, wq, preferred_element_type=x.dtype)
+            k = jnp.einsum("bsd,dhk->bshk", kv_input, wk, preferred_element_type=x.dtype)
+            v = jnp.einsum("bsd,dhk->bshk", kv_input, wv, preferred_element_type=x.dtype)
+            if "bqkv" in p:
+                bq, bk, bv = jnp.split(p["bqkv"], [hq, hq + hkv], axis=0)
+                q, k, v = q + bq, k + bk, v + bv
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=x.dtype)
+        kv = jnp.einsum("bsd,dhk->bshk", src, p["wkv"], preferred_element_type=x.dtype)
+        if "bq" in p:
+            q = q + p["bq"]
+            kv = kv + p["bkv"]
+        k, v = jnp.split(kv, [hkv], axis=2)
+    is_cross = kv_input is not None
+    if not is_cross:
+        q = apply_rope(q, positions, inv, rot)
+        k = apply_rope(k, positions, inv, rot)
+    n_rep = q.shape[2] // k.shape[2]
+    if cache is None or is_cross:
+        out = chunked_attention(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                                causal=causal and not is_cross)
+        new_cache = None
+    elif mode == "prefill":
+        # write fresh k/v at the start of the cache; attend within the prompt
+        kc = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        out = chunked_attention(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep),
+                                causal=True)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # decode: insert k/v at position cache["len"]
+        idx = cache["len"]
+        kc = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        out = decode_attention(q, _repeat_kv(kc, n_rep), _repeat_kv(vc, n_rep),
+                               idx + q.shape[1])
+        new_cache = {"k": kc, "v": vc}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"], preferred_element_type=x.dtype)
+    return y, new_cache
+
+
+# --------------------------------------------------------------------- MLA
+
+
+def mla_params(key, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p: Dict = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], (d, cfg.q_lora_rank), 0, dtype)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), dtype)
+        p["wuq"] = dense_init(ks[1], (cfg.q_lora_rank, h, dn + dr), 0, dtype)
+    else:
+        p["wuq"] = dense_init(ks[1], (d, h, dn + dr), 0, dtype)
+    p["wdkv"] = dense_init(ks[2], (d, cfg.kv_lora_rank), 0, dtype)
+    p["kv_norm"] = jnp.ones((cfg.kv_lora_rank,), dtype)
+    p["wkr"] = dense_init(ks[3], (d, dr), 0, dtype)  # shared rope key
+    p["wuk"] = dense_init(ks[4], (cfg.kv_lora_rank, h, dn), 0, dtype)
+    p["wuv"] = dense_init(ks[5], (cfg.kv_lora_rank, h, dv), 0, dtype)
+    p["wo"] = dense_init(ks[6], (h, dv, d), None, dtype)
+    return p
+
+
+def mla_apply(
+    p: Dict, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+    cache: Optional[Dict] = None,  # {"ckv": [B, C, r], "kr": [B, C, dr], "len"}
+    mode: str = "train",
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    from .layers import rms_norm
+
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    inv, rot = rope_freqs(dr, cfg.rope_theta, 1.0)
+
+    if cfg.q_lora_rank:
+        from .layers import pdot as _pdot
+        cq = rms_norm(_pdot(x, p["wdq"]), p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"], preferred_element_type=x.dtype)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wuq"], preferred_element_type=x.dtype)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, inv, rot)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    from .layers import pdot as _pdot
+    ckv = rms_norm(_pdot(x, p["wdkv"]), p["kv_norm"])  # [B, S, r]
+    kr = apply_rope((_pdot(x, p["wkr"]))[:, :, None, :], positions, inv, rot)  # [B,S,1,dr]
+
+    def expand(ckv_src, kr_src):
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv_src.astype(x.dtype), p["wuk"], preferred_element_type=x.dtype)
+        v = jnp.einsum("bsr,rhk->bshk", ckv_src.astype(x.dtype), p["wuv"], preferred_element_type=x.dtype)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_src.astype(x.dtype),
+                                      k_nope.shape[:3] + (dr,))], axis=-1)
+        return k_full, v
+
+    if cache is None:
+        k_full, v = expand(ckv, kr)
+        out = chunked_attention(qf, k_full, v, causal=True)
+        new_cache = None
+    elif mode == "prefill":
+        ckv_c = lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+        kr_c = lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), 0, axis=1)
+        k_full, v = expand(ckv, kr)
+        out = chunked_attention(qf, k_full, v, causal=True)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    else:
+        idx = cache["len"]
+        ckv_c = lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
+        kr_c = lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), idx, axis=1)
+        k_full, v = expand(ckv_c, kr_c[:, :, None, :])
+        out = decode_attention(qf, k_full, v, idx + s)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"], preferred_element_type=x.dtype)
+    return y, new_cache

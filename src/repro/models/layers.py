@@ -1,0 +1,132 @@
+"""Shared neural-net layers (functional, param-pytree style)."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if in_axis is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def pdot(x, w, sub=None):
+    """Projection GEMM keeping the OUTPUT in the activation dtype, so TP
+    partial sums are all-reduced in bf16 rather than f32 (the MXU still
+    accumulates fp32 internally per shard). NOTE: the CPU backend
+    canonicalizes bf16 dots to f32 regardless, so the dry-run census cannot
+    observe this saving — it applies on real TPUs (EXPERIMENTS.md §Perf).
+
+    ``sub``: optional einsum subscript (default '...a,ab->...b').
+    """
+    return jnp.einsum(sub or "...a,ab->...b", x, w,
+                      preferred_element_type=x.dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    # statistics in fp32, but x itself is consumed in its own dtype: keeping
+    # the x-cotangent bf16 halves the TP all-reduce traffic in backward
+    # (EXPERIMENTS.md §Perf), and the fp32 master scale is cast at use so the
+    # residual stream never upcasts.
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * scale * w.astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+def apply_norm(cfg_norm: str, x, p: Dict):
+    if cfg_norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+def norm_params(cfg_norm: str, d: int, dtype=jnp.float32) -> Dict:
+    if cfg_norm == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+# ----------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_frac: float = 1.0):
+    rot = int(head_dim * rotary_frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv), rot
+
+
+def apply_rope(x, positions, inv_freq, rot: int):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # [..., S, rot/2]
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def mlp_params(key, d: int, f: int, act: str, bias: bool, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {}
+    if act == "swiglu":
+        p["wi"] = dense_init(ks[0], (d, f), 0, dtype)
+        p["wg"] = dense_init(ks[1], (d, f), 0, dtype)
+    else:
+        p["wi"] = dense_init(ks[0], (d, f), 0, dtype)
+    p["wo"] = dense_init(ks[2], (f, d), 0, dtype)
+    if bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_apply(p: Dict, x, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(pdot(x, p["wi"])) * pdot(x, p["wg"])
+    else:
+        h = pdot(x, p["wi"])
+        if "bi" in p:
+            h = h + p["bi"]
+        h = jax.nn.gelu(h)
+    out = pdot(h, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ----------------------------------------------------------------- loss
+
+
+def softmax_cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    """logits: [..., V] fp32 recommended; labels int. Returns mean loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(loss)

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with expert parallelism over the 'model' mesh axis.
+
+Design (Atlas staging principle applied to MoE): tokens stay replicated across
+the 'model' axis within each data shard; each device owns ``E / ep`` experts
+and computes only its experts' contributions via a capacity-bounded batched
+einsum; a single ``psum`` over 'model' combines — one collective per MoE
+layer, concentrated at the block boundary (no a2a choreography inside).
+
+Implemented with shard_map so the expert slice indexing is explicit and the
+compiler cannot degrade the dispatch scatter into cross-shard gathers.
+Works on a 1-device mesh for smoke tests; differentiable (used inside
+train_step under remat + scan).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layers import dense_init
+
+
+def moe_params(key, cfg, dtype=jnp.float32) -> Dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), 1, dtype),
+        "wg": dense_init(ks[2], (e, d, f), 1, dtype),
+        "wo": dense_init(ks[3], (e, f, d), 1, dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(kss[0], (d, fs), 0, dtype),
+            "wg": dense_init(kss[1], (d, fs), 0, dtype),
+            "wo": dense_init(kss[2], (fs, d), 0, dtype),
+        }
+    return p
+
+
+def _local_expert_ffn(x_buf, wi, wg, wo):
+    # x_buf: [E_loc, C, D]; weights [E_loc, D, F] / [E_loc, F, D]
+    pet = dict(preferred_element_type=x_buf.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_buf, wi, **pet)) * jnp.einsum(
+        "ecd,edf->ecf", x_buf, wg, **pet
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wo, **pet)
+
+
+def moe_apply(
+    p: Dict,
+    x: jnp.ndarray,  # [B, S, D]
+    cfg,
+    mesh: Optional[Mesh],
+    data_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B, S, D], aux load-balancing loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_top_k
+    cf = cfg.moe_capacity_factor
+
+    def device_fn(xl, router, wi, wg, wo):
+        # xl: [B_loc, S, D] (replicated over model axis within the data shard)
+        bl = xl.shape[0]
+        t = bl * s
+        xt = xl.reshape(t, d)
+        logits = (xt.astype(jnp.float32) @ router).astype(jnp.float32)  # [T, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        topw, topi = lax.top_k(probs, k)  # [T, k]
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+        # aux load-balance loss (Switch-style), averaged over data shards
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.zeros((e,), jnp.float32)
+        ce = ce.at[topi.reshape(-1)].add(1.0) / (t * k)
+        aux = e * jnp.sum(me * ce)
+        aux = lax.pmean(aux, data_axes)
+
+        ep = lax.axis_size(model_axis)
+        my = lax.axis_index(model_axis)
+        e_loc = e // ep
+        cap = max(int(np.ceil(t * k / e * cf)), 1)
+
+        # position of each assignment within its expert — sort-based (O(T*k)
+        # memory; the one-hot-cumsum formulation would be O(T*k*E))
+        flat_e = topi.reshape(-1)
+        flat_w = topw.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)  # [T*k]
+        sorted_e = flat_e[order]
+        inv = jnp.zeros_like(order).at[order].set(jnp.arange(t * k))
+        start = jnp.searchsorted(sorted_e, jnp.arange(e))  # [E]
+        slot_pos = inv - start[flat_e]
+        local = (flat_e >= my * e_loc) & (flat_e < (my + 1) * e_loc)
+        ok = local & (slot_pos < cap)
+        e_local_idx = jnp.where(ok, flat_e - my * e_loc, 0)
+        buf_idx = jnp.where(ok, e_local_idx * cap + slot_pos, e_loc * cap)  # dump slot
+        buf = jnp.zeros((e_loc * cap + 1, d), dtype=xl.dtype)
+        tok_idx = jnp.arange(t * k) // k
+        buf = buf.at[buf_idx].add(xt[tok_idx] * ok[:, None].astype(xl.dtype))
+        buf = buf[: e_loc * cap].reshape(e_loc, cap, d)
+
+        out_buf = _local_expert_ffn(buf, wi, wg, wo)  # [E_loc, C, D]
+        out_flat = jnp.concatenate(
+            [out_buf.reshape(e_loc * cap, d), jnp.zeros((1, d), out_buf.dtype)], 0
+        )
+        contrib = out_flat[buf_idx] * (flat_w * ok).astype(out_buf.dtype)[:, None]
+        yt = jnp.zeros((t, d), dtype=xl.dtype)
+        yt = yt.at[tok_idx].add(contrib)
+        yt = lax.psum(yt, model_axis)
+        return yt.reshape(bl, s, d), aux
+
+    if mesh is None:
+        # single-process fallback: emulate 1x1 mesh
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        data_axes, model_axis = ("data",), "model"
+
+    ndp = int(np.prod([mesh.shape[a] for a in data_axes]))
+    if b % ndp != 0:
+        # tiny batches (e.g. long-context decode, B=1) can't shard over DP:
+        # replicate tokens; expert parallelism still splits the compute.
+        dspec = P(None, None, None)
+    else:
+        dspec = P(data_axes, None, None)
+    fn = shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(
+            dspec,
+            P(None, None),
+            P(model_axis, None, None),
+            P(model_axis, None, None),
+            P(model_axis, None, None),
+        ),
+        out_specs=(dspec, P()),
+        check_rep=False,
+    )
+    y, aux = fn(x, p["router"], p["wi"], p["wg"], p["wo"])
+    aux = jnp.mean(aux)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        from .layers import pdot
+        y = y + pdot(jax.nn.silu(pdot(x, sh["wi"])) * pdot(x, sh["wg"]), sh["wo"])
+    return y, aux

@@ -1,0 +1,151 @@
+"""Parameter / batch / cache sharding rules for the production mesh.
+
+Policy (DESIGN.md §5):
+* TP over 'model' (attention heads when divisible, SwiGLU d_ff, padded vocab);
+* EP over 'model' for MoE expert dim;
+* DP over ('pod','data') for the batch;
+* FSDP over 'data' (+'pod' multi-pod) on the d_model axis of big matrices;
+* every proposed spec is *sanitized* against actual divisibility, so configs
+  whose head counts don't divide the mesh (qwen2: 12H, starcoder2: 24H,
+  whisper: 8H) degrade per-tensor to replication instead of failing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def sanitize(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    out = []
+    for d, axes in enumerate(spec):
+        if axes is None or d >= len(shape):
+            out.append(None)
+            continue
+        if shape[d] % _axsize(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            # try dropping trailing axes of a tuple before giving up
+            if isinstance(axes, (tuple, list)):
+                kept = list(axes)
+                while kept and shape[d] % _axsize(mesh, tuple(kept)) != 0:
+                    kept.pop()
+                out.append(tuple(kept) if kept else None)
+            else:
+                out.append(None)
+    return P(*out)
+
+
+def param_spec(path, shape, mesh: Mesh, fsdp, model="model") -> P:
+    """Rule table keyed on leaf name + ndim.
+
+    Leaves under a scanned stack ('body' / 'encoder' / 'm'/'v' mirrors of
+    them) carry a leading [reps] dim: the rule applies to the trailing dims
+    and the reps dim stays unsharded.
+    """
+    names = [p.key if hasattr(p, "key") else str(p) for p in path]
+    leaf = names[-1]
+    stacked = any(n in ("body", "encoder") for n in names)
+    nd = len(shape) - (1 if stacked else 0)
+
+    def mk(*axes):
+        if stacked:
+            axes = (None,) + axes
+        return sanitize(mesh, P(*axes), shape)
+
+    if leaf == "embed":
+        return mk(model, fsdp)
+    if leaf == "lm_head":
+        return mk(fsdp, model)
+    if leaf in ("wq", "wk", "wv", "wqkv"):  # [D, H(+2Hkv), hd]
+        return mk(fsdp, model, None)
+    if leaf == "wkv":  # [D, 2*Hkv, hd]: splits into k|v halves at use — shard
+        # only if each HALF shards (else the split forces per-step resharding
+        # of the KV path, disastrous for decode)
+        tp = _axsize(mesh, model)
+        if (shape[1 if not stacked else 2] // 2) % tp == 0:
+            return mk(fsdp, model, None)
+        return mk(fsdp, None, None)
+    if leaf == "wo" and nd == 3:  # attn out [H, hd, D]
+        return mk(model, None, fsdp)
+    if leaf in ("wi", "wg") and nd == 3:  # moe experts [E, D, F]
+        return mk(model, fsdp, None)
+    if leaf == "wo" and nd == 2 and "ffn" in names and any(
+        n in ("wi", "wg") for n in names
+    ):
+        return mk(model, fsdp)
+    if leaf in ("wi", "wg") and nd == 2:  # mlp [D, F]
+        return mk(fsdp, model)
+    if leaf == "wo" and nd == 2:  # mlp out [F, D]
+        return mk(model, fsdp)
+    if leaf in ("wuq", "wuk", "wuv"):  # mla up [r|D, H, k]
+        return mk(None, model, None)
+    if leaf in ("wdq", "wdkv", "wkr"):  # mla down [D, r]
+        return mk(fsdp, None)
+    if leaf in ("wz", "wx"):  # mamba in [D, d_in]
+        return mk(fsdp, model)
+    if leaf == "w_out":  # mamba out [d_in, D]
+        return mk(model, fsdp)
+    if leaf in ("wB", "wC", "wdt"):
+        return mk(fsdp, None)
+    if leaf.startswith("conv_"):
+        return mk(None, model) if nd == 2 else P()
+    if leaf == "proj":  # mtp [2D, D]
+        return mk(fsdp, None)
+    if leaf == "router":
+        return P(None, None) if nd == 2 else P()
+    return P()  # norms, biases, scalars: replicated
+
+
+def params_shardings(mesh: Mesh, params_shape, multi_pod: bool = False):
+    fsdp: Any = ("data",) if not multi_pod else ("pod", "data")
+
+    def spec_of(path, leaf):
+        shape = leaf.shape
+        return NamedSharding(mesh, param_spec(path, shape, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape, multi_pod: bool = False):
+    dp: Any = ("pod", "data") if multi_pod else ("data",)
+
+    def spec_of(path, leaf):
+        # tokens/labels [B, S]; frames/patches [B, S, D]
+        spec = P(dp, *([None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, sanitize(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(spec_of, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape, multi_pod: bool = False):
+    """KV/SSM caches: batch over DP axes when divisible; otherwise shard the
+    sequence axis over ('data','model') (long-context, batch=1)."""
+    dp: Any = ("pod", "data") if multi_pod else ("data",)
+
+    def spec_of(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        b = shape[0]
+        if b % _axsize(mesh, dp) == 0 and b > 1:
+            spec = P(dp, *([None] * (len(shape) - 1)))
+        elif len(shape) >= 3:
+            # batch too small: shard the (long) sequence axis instead
+            spec = P(None, ("data", "model"), *([None] * (len(shape) - 2)))
+        else:
+            spec = P(*([None] * len(shape)))
+        return NamedSharding(mesh, sanitize(mesh, spec, shape))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)

@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block, chunked, in pure JAX.
+
+Follows the minimal SSD reference from the Mamba-2 paper (Dao & Gu 2024):
+sequence split into chunks; intra-chunk term is a masked quadratic form,
+inter-chunk term carries the [H, P, N] state through a lax.scan. Decode keeps
+an O(1) recurrent state (conv window + SSM state) — this is why the ssm/hybrid
+architectures run the long_500k shape.
+
+Projections are kept as separate weights per logical segment (z, x, B, C, dt)
+instead of one fused in_proj so each shards cleanly over the mesh
+(d_inner over 'model', d_model over the FSDP axis) without cross-segment
+boundary misalignment.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init, pdot, rms_norm
+
+
+def _segsum(x):
+    """x: [..., T] -> [..., T, T] with out[.., i, j] = sum_{j<k<=i} x[..k] for
+    j <= i, -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # [B, S, H, P]
+    a_log: jnp.ndarray,  # [B, S, H]  (= dt * A, negative)
+    B_: jnp.ndarray,  # [B, S, N]   (single group)
+    C_: jnp.ndarray,  # [B, S, N]
+    chunk: int = 128,
+    h0: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a_log.reshape(b, nc, chunk, h).transpose(0, 1, 3, 2)  # [B, nc, H, T]
+    Bc = B_.reshape(b, nc, chunk, n)
+    Cc = C_.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # [B, nc, H, T]
+    L = jnp.exp(_segsum(ac))  # [B, nc, H, T, T]
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc, L, xc)
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # [B, nc, H, T]
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(a_cum[..., -1])  # [B, nc, H]
+
+    def step(carry, inp):
+        st, dec = inp  # st: [B, H, P, N], dec: [B, H]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = h0.astype(x.dtype) if h0 is not None else jnp.zeros((b, h, p, n), x.dtype)
+    final_state, prev_states = lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B, nc, H, P, N]
+    state_decay_out = jnp.exp(a_cum)  # [B, nc, H, T]
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Cc, prev_states, state_decay_out)
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, final_state
+
+
+def mamba2_params(key, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nheads = d_in // cfg.ssm_headdim
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], (d, d_in), 0, dtype),
+        "wx": dense_init(ks[1], (d, d_in), 0, dtype),
+        "wB": dense_init(ks[2], (d, n), 0, dtype),
+        "wC": dense_init(ks[3], (d, n), 0, dtype),
+        "wdt": dense_init(ks[4], (d, nheads), 0, dtype),
+        "conv_x": dense_init(ks[5], (cfg.ssm_conv, d_in), 0, dtype),
+        "conv_B": dense_init(ks[6], (cfg.ssm_conv, n), 0, dtype),
+        "conv_C": dense_init(ks[7], (cfg.ssm_conv, n), 0, dtype),
+        "conv_bx": jnp.zeros((d_in,), dtype),
+        "conv_bB": jnp.zeros((n,), dtype),
+        "conv_bC": jnp.zeros((n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[5], (d_in, d), 0, dtype),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """u: [B, S, C]; w: [K, C] depthwise causal; returns ([B, S, C], state)."""
+    k = w.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    new_state = up[:, -(k - 1):, :] if k > 1 else None
+    out = sum(up[:, i : i + u.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba2_cache_shape(cfg, batch: int) -> Dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    return {
+        "conv_x": (batch, cfg.ssm_conv - 1, d_in),
+        "conv_B": (batch, cfg.ssm_conv - 1, cfg.ssm_state),
+        "conv_C": (batch, cfg.ssm_conv - 1, cfg.ssm_state),
+        "ssm": (batch, nheads, cfg.ssm_headdim, cfg.ssm_state),
+    }
+
+
+def mamba2_apply(
+    p: Dict,
+    x: jnp.ndarray,  # [B, S, D]
+    cfg,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    hd = cfg.ssm_headdim
+    nheads = d_in // hd
+    n = cfg.ssm_state
+
+    z = pdot(x, p["wz"])
+    xin = pdot(x, p["wx"])
+    B_ = pdot(x, p["wB"])
+    C_ = pdot(x, p["wC"])
+    dt = pdot(x, p["wdt"])
+
+    cx = cache["conv_x"] if cache is not None else None
+    cB = cache["conv_B"] if cache is not None else None
+    cC = cache["conv_C"] if cache is not None else None
+    xin, ncx = _causal_conv(xin, p["conv_x"], p["conv_bx"], cx)
+    B_, ncB = _causal_conv(B_, p["conv_B"], p["conv_bB"], cB)
+    C_, ncC = _causal_conv(C_, p["conv_C"], p["conv_bC"], cC)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    a_log = dt * A
+    xh = xin.reshape(b, s, nheads, hd)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    h0 = cache["ssm"] if cache is not None else None
+    y, hN = ssd_chunked(
+        xdt, a_log, B_.astype(jnp.float32), C_.astype(jnp.float32),
+        chunk=min(128, max(16, s)), h0=h0,
+    )
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = pdot(y, p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv_x": ncx.astype(cache["conv_x"].dtype),
+            "conv_B": ncB.astype(cache["conv_B"].dtype),
+            "conv_C": ncC.astype(cache["conv_C"].dtype),
+            "ssm": hN.astype(cache["ssm"].dtype),
+        }
+    return out, new_cache

@@ -1,0 +1,402 @@
+"""Model assembly: heterogeneous decoder stacks with scan-over-layers.
+
+Layer sequence = unrolled prefix (e.g. DeepSeek's leading dense layers) + a
+periodic body (unit of `u` layers scanned `reps` times: jamba's 8-layer
+mamba/attn block, llama-vision's 5-layer cross-attn period, plain 1-layer
+units for dense models). Scanning keeps HLO size O(unit), not O(depth) —
+essential for compiling 61-72 layer models in the dry-run.
+
+Modes: 'train' (chunked causal attention), 'prefill' (chunked + cache write
+at 0), 'decode' (single-token step against the cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh
+
+from ..configs.base import ArchConfig
+from .attention import gqa_apply, gqa_params, mla_apply, mla_params
+from .layers import (
+    apply_norm,
+    dense_init,
+    mlp_apply,
+    mlp_params,
+    norm_params,
+    softmax_cross_entropy,
+)
+from .moe import moe_apply, moe_params
+from .ssm import mamba2_apply, mamba2_cache_shape, mamba2_params
+
+KEEP_F32 = ("A_log", "dt_bias", "D", "router", "q_norm", "kv_norm")
+
+
+def _cast_params(params, dtype):
+    def cast(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if x.dtype == jnp.float32 and name not in KEEP_F32 and x.ndim >= 2:
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+# ---------------------------------------------------------------- structure
+
+
+def body_structure(cfg: ArchConfig) -> Tuple[Tuple[str, ...], Tuple[str, ...], int]:
+    """Returns (prefix_kinds, unit_kinds, reps)."""
+    kinds = cfg.layer_kinds()
+    prefix = kinds[: cfg.first_k_dense]
+    rest = kinds[cfg.first_k_dense:]
+    n = len(rest)
+    unit = n
+    for u in range(1, n + 1):
+        if n % u == 0 and all(rest[i] == rest[i % u] for i in range(n)):
+            unit = u
+            break
+    return tuple(prefix), tuple(rest[:unit]), n // unit
+
+
+def layer_param_init(key, cfg: ArchConfig, kind: str, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": norm_params(cfg.norm, cfg.d_model, dtype)}
+    if kind.startswith("ssm"):
+        p["mixer"] = mamba2_params(ks[0], cfg, dtype)
+    elif cfg.mla:
+        p["mixer"] = mla_params(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = gqa_params(ks[0], cfg, dtype)
+    if "+cross" in kind:
+        p["norm_c"] = norm_params(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = gqa_params(ks[1], cfg, dtype)
+    if "+moe" in kind:
+        p["norm2"] = norm_params(cfg.norm, cfg.d_model, dtype)
+        p["ffn"] = moe_params(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["norm2"] = norm_params(cfg.norm, cfg.d_model, dtype)
+        p["ffn"] = mlp_params(ks[2], cfg.d_model, cfg.d_ff, cfg.act, cfg.mlp_bias, dtype)
+    # d_ff == 0 (pure mamba2): the mixer is the whole layer
+    return p
+
+
+def layer_cache_init(cfg: ArchConfig, kind: str, batch: int, cache_len: int, dtype):
+    if kind.startswith("ssm"):
+        shapes = mamba2_cache_shape(cfg, batch)
+        return {k: jnp.zeros(v, jnp.float32 if k == "ssm" else dtype)
+                for k, v in shapes.items()}
+    if cfg.mla:
+        return {
+            "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------- blocks
+
+
+def block_apply(
+    kind: str,
+    lp: Dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    mesh: Optional[Mesh],
+    data_axes: Tuple[str, ...],
+    mode: str,
+    cache: Optional[Dict],
+    cache_len_now,  # scalar int32 (tokens already in cache) or None
+    cross_kv: Optional[jnp.ndarray],
+):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = apply_norm(cfg.norm, x, lp["norm1"])
+    if kind.startswith("ssm"):
+        h, new_cache = mamba2_apply(lp["mixer"], h, cfg, cache)
+    else:
+        attn_cache = None
+        if cache is not None:
+            attn_cache = dict(cache)
+            attn_cache["len"] = cache_len_now
+        if cfg.mla:
+            h, nc = mla_apply(lp["mixer"], h, cfg, positions, attn_cache, mode=mode)
+        else:
+            h, nc = gqa_apply(lp["mixer"], h, cfg, positions, attn_cache, mode=mode)
+        if nc is not None:
+            nc.pop("len", None)
+            new_cache = nc
+    x = x + h
+    if "+cross" in kind:
+        h = apply_norm(cfg.norm, x, lp["norm_c"])
+        h, _ = gqa_apply(lp["cross"], h, cfg, positions, None, kv_input=cross_kv)
+        x = x + h
+    if "ffn" in lp:
+        h = apply_norm(cfg.norm, x, lp["norm2"])
+        if "+moe" in kind:
+            h, aux = moe_apply(lp["ffn"], h, cfg, mesh, data_axes=data_axes)
+        else:
+            h = mlp_apply(lp["ffn"], h, cfg.act)
+        x = x + h
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------- model
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        mesh: Optional[Mesh] = None,
+        data_axes: Tuple[str, ...] = ("data",),
+        remat: bool = True,
+        sequence_parallel: bool = False,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.remat = remat
+        self.sequence_parallel = sequence_parallel
+        self.prefix_kinds, self.unit_kinds, self.reps = body_structure(cfg)
+        self.compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def _wsc(self, x):
+        """Pin the residual stream: batch over DP axes; with sequence
+        parallelism also shard the sequence dim over 'model' (turns the TP
+        all-reduces into reduce-scatter + deferred all-gather and shards the
+        saved activations — Megatron-SP, DESIGN.md §5)."""
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        b = x.shape[0]
+        dp = self.data_axes
+        ndp = 1
+        for a in dp:
+            ndp *= self.mesh.shape[a]
+        dp_ok = b % ndp == 0
+        sp_ok = (
+            self.sequence_parallel
+            and x.ndim >= 3
+            and x.shape[1] % self.mesh.shape.get("model", 1) == 0
+        )
+        dims = [dp if dp_ok else None] + [None] * (x.ndim - 1)
+        if sp_ok:
+            dims[1] = "model"
+        spec = P(*dims)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), 1),
+            "final_norm": norm_params(cfg.norm, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), 0)
+        if self.prefix_kinds:
+            pk = jax.random.split(ks[2], len(self.prefix_kinds))
+            params["prefix"] = [
+                layer_param_init(pk[i], cfg, kind)
+                for i, kind in enumerate(self.prefix_kinds)
+            ]
+        bk = jax.random.split(ks[3], self.reps)
+
+        def unit_params(k):
+            uk = jax.random.split(k, len(self.unit_kinds))
+            return {
+                f"l{j}": layer_param_init(uk[j], cfg, kind)
+                for j, kind in enumerate(self.unit_kinds)
+            }
+
+        per_rep = [unit_params(bk[r]) for r in range(self.reps)]
+        params["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+        if cfg.encoder_layers:
+            ek = jax.random.split(ks[4], cfg.encoder_layers)
+            per = [layer_param_init(ek[i], cfg, "attn") for i in range(cfg.encoder_layers)]
+            params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+            params["enc_norm"] = norm_params(cfg.norm, cfg.d_model)
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": dense_init(ks[5], (2 * cfg.d_model, cfg.d_model), 0),
+                "block": layer_param_init(ks[6], cfg, "attn"),
+                "norm": norm_params(cfg.norm, cfg.d_model),
+            }
+        return params
+
+    # ------------------------------------------------------------- caches
+    def init_cache(self, batch: int, cache_len: int) -> Dict:
+        cfg = self.cfg
+        dt = self.compute_dtype
+        cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+        if self.prefix_kinds:
+            cache["prefix"] = [
+                layer_cache_init(cfg, kind, batch, cache_len, dt)
+                for kind in self.prefix_kinds
+            ]
+        per = [
+            {
+                f"l{j}": layer_cache_init(cfg, kind, batch, cache_len, dt)
+                for j, kind in enumerate(self.unit_kinds)
+            }
+            for _ in range(self.reps)
+        ]
+        cache["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        return cache
+
+    # ------------------------------------------------------------ encoder
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(self.compute_dtype)
+        pos = jnp.arange(x.shape[1])[None, :]
+
+        def enc_layer(x, lp):
+            h = apply_norm(cfg.norm, x, lp["norm1"])
+            h, _ = gqa_apply(lp["mixer"], h, cfg, pos)
+            x = x + h
+            h = apply_norm(cfg.norm, x, lp["norm2"])
+            return x + mlp_apply(lp["ffn"], h, cfg.act), None
+
+        x, _ = lax.scan(enc_layer, x, params["encoder"])
+        return apply_norm(cfg.norm, x, params["enc_norm"])
+
+    # ------------------------------------------------------------ forward
+    def forward(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,  # [B, S]
+        extras: Optional[Dict] = None,
+        cache: Optional[Dict] = None,
+        mode: str = "train",
+    ):
+        cfg = self.cfg
+        params = _cast_params(params, self.compute_dtype)
+        b, s = tokens.shape
+        x = self._wsc(params["embed"][tokens])  # [B, S, D]
+        cache_len_now = cache["len"] if cache is not None else None
+        if cache is not None:
+            positions = cache["len"] + jnp.arange(s)[None, :]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (1, s))
+
+        cross_kv = None
+        if extras:
+            if "frames" in extras:
+                cross_kv = self._encode(params, extras["frames"])
+            elif "patches" in extras:
+                cross_kv = extras["patches"].astype(self.compute_dtype)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: Dict[str, Any] = {}
+        if cache is not None:
+            new_cache = {"len": cache["len"] + s}
+
+        # prefix layers (unrolled)
+        if self.prefix_kinds:
+            npfx = []
+            for i, kind in enumerate(self.prefix_kinds):
+                c = cache["prefix"][i] if cache is not None else None
+                x, aux, nc = block_apply(
+                    kind, params["prefix"][i], x, cfg, positions, self.mesh,
+                    self.data_axes, mode, c, cache_len_now, cross_kv,
+                )
+                aux_total = aux_total + aux
+                npfx.append(nc)
+            if cache is not None:
+                new_cache["prefix"] = npfx
+
+        # periodic body (scanned)
+        def unit_fn(carry, xs):
+            xc, aux_acc = carry
+            if cache is not None:
+                pu, cu = xs
+            else:
+                pu, cu = xs, None
+            xc = self._wsc(xc)
+            ncu = {}
+            for j, kind in enumerate(self.unit_kinds):
+                cj = cu[f"l{j}"] if cu is not None else None
+                xc, aux, ncj = block_apply(
+                    kind, pu[f"l{j}"], xc, cfg, positions, self.mesh,
+                    self.data_axes, mode, cj, cache_len_now, cross_kv,
+                )
+                aux_acc = aux_acc + aux
+                ncu[f"l{j}"] = ncj if ncj is not None else 0.0
+            return (self._wsc(xc), aux_acc), (ncu if cache is not None else 0.0)
+
+        body_fn = jax.checkpoint(unit_fn) if (self.remat and mode == "train") else unit_fn
+        xs = (params["body"], cache["body"]) if cache is not None else params["body"]
+        (x, aux_total), ys = lax.scan(body_fn, (x, aux_total), xs)
+        if cache is not None:
+            new_cache["body"] = ys
+
+        x = apply_norm(cfg.norm, x, params["final_norm"])
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ).astype(self.compute_dtype)
+        logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=x.dtype)
+        return logits, aux_total, (new_cache if cache is not None else None), x
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch: Dict):
+        cfg = self.cfg
+        extras = {k: v for k, v in batch.items() if k in ("frames", "patches")}
+        logits, aux, _, h = self.forward(
+            params, batch["tokens"], extras=extras or None, mode="train"
+        )
+        loss = softmax_cross_entropy(logits, batch["labels"])
+        metrics = {"ce_loss": loss, "aux_loss": aux}
+        total = loss + 0.01 * aux
+        if cfg.mtp:
+            params_c = _cast_params(params, self.compute_dtype)
+            mtp = params_c["mtp"]
+            emb_next = params_c["embed"][batch["labels"]]
+            hm = jnp.einsum("bsd,de->bse", jnp.concatenate([h, emb_next], axis=-1), mtp["proj"], preferred_element_type=h.dtype)
+            pos = jnp.broadcast_to(
+                jnp.arange(hm.shape[1])[None, :], (1, hm.shape[1]))
+            hm, _, _ = block_apply(
+                "attn", mtp["block"], hm, cfg, pos, self.mesh, self.data_axes,
+                "train", None, None, None,
+            )[0:3]
+            hm = apply_norm(cfg.norm, hm, mtp["norm"])
+            head = (
+                params_c["embed"].T if cfg.tie_embeddings else params_c["lm_head"]
+            )
+            mtp_logits = hm @ head
+            labels2 = jnp.roll(batch["labels"], -1, axis=1)
+            mtp_loss = softmax_cross_entropy(mtp_logits[:, :-1], labels2[:, :-1])
+            metrics["mtp_loss"] = mtp_loss
+            total = total + 0.3 * mtp_loss
+        metrics["loss"] = total
+        return total, metrics
+
+    # -------------------------------------------------------------- serve
+    def prefill(self, params, tokens, extras=None, cache_len: Optional[int] = None):
+        """Returns (last-token logits [B, V], filled cache)."""
+        b, s = tokens.shape
+        cache = self.init_cache(b, cache_len or s)
+        logits, _, new_cache, _ = self.forward(
+            params, tokens, extras=extras, cache=cache, mode="prefill"
+        )
+        return logits[:, -1], new_cache
+
+    def decode_step(self, params, tokens, cache, extras=None):
+        """tokens: [B, 1]. Returns (logits [B, V], updated cache)."""
+        logits, _, new_cache, _ = self.forward(
+            params, tokens, extras=extras, cache=cache, mode="decode"
+        )
+        return logits[:, -1], new_cache

@@ -1,0 +1,127 @@
+"""Gate application primitives on dense state-vector views.
+
+Conventions (used across repro.sim):
+
+* flat state ``psi[2^n]``: index bit ``p`` (0 = least significant) is
+  *physical* qubit ``p``;
+* view ``psi.reshape((2,)*n)``: array axis ``i`` corresponds to bit ``n-1-i``;
+* a gate's matrix index bit ``j`` (see repro.core.gates) binds to
+  ``gate.qubits[j]``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def axis_of_bit(n: int, p: int) -> int:
+    return n - 1 - p
+
+
+def apply_matrix(psi_view: jnp.ndarray, mat: jnp.ndarray, bits: Sequence[int]) -> jnp.ndarray:
+    """Apply a ``2^k x 2^k`` matrix to the view on index bits ``bits`` (bit j of
+    the matrix index binds to bits[j])."""
+    n = psi_view.ndim
+    k = len(bits)
+    mat_t = mat.reshape((2,) * (2 * k))
+    # mat_t axes: (out_{k-1}..out_0, in_{k-1}..in_0)
+    state_axes = [axis_of_bit(n, b) for b in bits]  # axis for gate bit j
+    in_axes = [2 * k - 1 - j for j in range(k)]
+    out = jnp.tensordot(mat_t, psi_view, axes=(in_axes, state_axes))
+    # output axes: (out_{k-1}..out_0) + remaining state axes (orig order)
+    dest = [state_axes[k - 1 - i] for i in range(k)]
+    return jnp.moveaxis(out, list(range(k)), dest)
+
+
+def apply_diag(psi_view: jnp.ndarray, diag: jnp.ndarray, bits: Sequence[int]) -> jnp.ndarray:
+    """Elementwise multiply by ``diag[2^k]`` indexed by the values of ``bits``."""
+    n = psi_view.ndim
+    k = len(bits)
+    d = diag.reshape((2,) * k)  # axis j' = bit bits[k-1-j'] (C-order: high first)
+    shape = [1] * n
+    perm_axes = [axis_of_bit(n, b) for b in bits]  # state axis for gate bit j
+    # build broadcastable weight: put d's axes at the right state positions
+    src = list(range(k))  # d axis i corresponds to gate bit k-1-i
+    dst = [perm_axes[k - 1 - i] for i in range(k)]
+    w = jnp.moveaxis(d.reshape((2,) * k + (1,) * (n - k)), src, dst)
+    return psi_view * w
+
+
+def embed_matrix(mat: np.ndarray, positions: Sequence[int], k: int) -> np.ndarray:
+    """Embed a matrix over ``len(positions)`` bits into a ``2^k``-bit space.
+
+    ``positions[j]`` is the target bit (within the k-bit space) for matrix
+    index bit ``j``. Pure numpy (host-side kernel building).
+    """
+    kk = len(positions)
+    dim, DIM = 2**kk, 2**k
+    out = np.zeros((DIM, DIM), dtype=np.complex128)
+    rest = [b for b in range(k) if b not in positions]
+    for base_bits in range(2 ** len(rest)):
+        base = 0
+        for j, b in enumerate(rest):
+            if (base_bits >> j) & 1:
+                base |= 1 << b
+        for r in range(dim):
+            ri = base
+            for j in range(kk):
+                if (r >> j) & 1:
+                    ri |= 1 << positions[j]
+            for c in range(dim):
+                v = mat[r, c]
+                if abs(v) < 1e-16:
+                    continue
+                ci = base
+                for j in range(kk):
+                    if (c >> j) & 1:
+                        ci |= 1 << positions[j]
+                out[ri, ci] = v
+    return out
+
+
+def specialize_gate(
+    mat: np.ndarray,
+    nonlocal_bits: Sequence[int],
+    values: Sequence[int],
+) -> Tuple[np.ndarray, Tuple[int, ...]]:
+    """Restrict a gate matrix on its non-local index bits.
+
+    For each non-local matrix bit ``j`` with effective input value ``v``:
+    * diagonal-in-j  -> keep entries with r_j == c_j == v;
+    * antidiag-in-j  -> keep entries with c_j == v, r_j == 1-v, and report the
+      bit as *flipped* (the caller toggles its lazy flip state).
+
+    Returns (reduced matrix over the remaining bits in ascending original
+    order, tuple of flipped non-local bit positions).
+    """
+    k = int(round(np.log2(mat.shape[0])))
+    rows, cols = np.nonzero(np.abs(mat) > 1e-14)
+    flipped = []
+    keep = np.ones(len(rows), dtype=bool)
+    for j, v in zip(nonlocal_bits, values):
+        rb, cb = (rows >> j) & 1, (cols >> j) & 1
+        if np.all(rb[keep] == cb[keep]):
+            keep &= (cb == v) & (rb == v)
+        elif np.all(rb[keep] != cb[keep]):
+            keep &= (cb == v) & (rb == (1 - v))
+            flipped.append(j)
+        else:
+            raise ValueError(f"matrix bit {j} is not insular; staging bug")
+    local_bits = [j for j in range(k) if j not in nonlocal_bits]
+    dim = 2 ** len(local_bits)
+    out = np.zeros((dim, dim), dtype=np.complex128)
+
+    def compress(idx: int) -> int:
+        r = 0
+        for jj, b in enumerate(local_bits):
+            if (idx >> b) & 1:
+                r |= 1 << jj
+        return r
+
+    for r, c, kp in zip(rows, cols, keep):
+        if kp:
+            out[compress(r), compress(c)] = mat[r, c]
+    return out, tuple(flipped)

@@ -1,0 +1,271 @@
+"""Stage compiler: SimulationPlan -> executable StageProgram list.
+
+Turns each planned stage into a sequence of data-parallel ops over the local
+shard, with all non-local (regional/global) qubit interaction reduced to:
+
+* **dep-batched tensors** — a kernel whose member gates have insular non-local
+  qubits becomes a tensor ``T[2^d, 2^k, 2^k]`` indexed by the *stored* values
+  of the d non-local bits (diagonal action -> entry selection, control ->
+  U-vs-I selection);
+* **scalar diagonals** — fully non-local diagonal gates become per-shard
+  scalars ``[2^d]``;
+* **lazy flips** — anti-diagonal action on a non-local qubit never moves data:
+  it toggles a flip bit (Häner-Steiger relabeling, paper Def. 2/App. B-a) that
+  (a) re-specializes every later gate referencing that qubit and (b) is
+  materialized for free inside the next inter-stage remap.
+
+The executors (pjit / offload / Pallas) consume StagePrograms unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.circuit import Circuit, Gate
+from ..core.cost_model import FUSION, SHM
+from ..core.partition import SimulationPlan
+from .apply import embed_matrix, specialize_gate
+
+INSULAR_KIND = 2  # kernel.kind for zero-footprint bookkeeping kernels
+
+
+@dataclass
+class Op:
+    """One data-parallel operation on the sharded state.
+
+    kind: 'fused' (tensor [2^d, 2^k, 2^k]), 'diag' (tensor [2^d, 2^k]),
+    'scalar' (tensor [2^d]).
+    ``local_bits``: physical local bit positions (ascending), len k.
+    ``dep_bits``: physical non-local bit positions (ascending), len d.
+    """
+
+    kind: str
+    local_bits: Tuple[int, ...]
+    dep_bits: Tuple[int, ...]
+    tensor: np.ndarray
+    gate_ids: Tuple[int, ...] = ()
+    shm_group: int = -1  # >=0: index of the VMEM(SHM) kernel this op belongs to
+
+
+@dataclass
+class RemapSpec:
+    """Bit permutation between two layouts (+ flips to materialize).
+
+    ``src_bit_of[p]`` = old physical bit feeding new physical bit p.
+    ``flip_bits``: old physical bit positions whose axis must be reversed
+    (pending lazy flips), applied before the permutation.
+    """
+
+    src_bit_of: Tuple[int, ...]
+    flip_bits: Tuple[int, ...]
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.flip_bits and all(i == p for p, i in enumerate(self.src_bit_of))
+
+
+@dataclass
+class StageProgram:
+    ops: List[Op]
+    layout: Tuple[int, ...]  # physical bit p holds logical qubit layout[p]
+    remap_after: Optional[RemapSpec]  # None for last stage (see final_remap)
+    n_shm_groups: int = 0
+
+
+@dataclass
+class CompiledCircuit:
+    n: int
+    L: int
+    R: int
+    G: int
+    programs: List[StageProgram]
+    initial_remap: Optional[RemapSpec]  # identity layout -> stage-0 layout
+    final_remap: Optional[RemapSpec]  # last layout (+pending flips) -> identity
+    dtype: np.dtype = np.complex64
+
+
+MAX_DEP_ENTRIES = 1 << 24  # cap on 2^d * 4^k tensor entries per op
+
+
+def _remap_spec(
+    old_layout: Sequence[int], new_layout: Sequence[int], flips_logical: Dict[int, int]
+) -> RemapSpec:
+    phys_old = {q: p for p, q in enumerate(old_layout)}
+    src = tuple(phys_old[q] for q in new_layout)
+    flip_bits = tuple(sorted(phys_old[q] for q, f in flips_logical.items() if f))
+    return RemapSpec(src_bit_of=src, flip_bits=flip_bits)
+
+
+def compile_plan(
+    circuit: Circuit, plan: SimulationPlan, dtype=np.complex64
+) -> CompiledCircuit:
+    n, L = plan.n_qubits, plan.L
+    programs: List[StageProgram] = []
+    flips: Dict[int, int] = {}  # logical qubit -> pending lazy flip (non-local only)
+
+    for si, st in enumerate(plan.stages):
+        layout = st.layout
+        phys_of = {q: p for p, q in enumerate(layout)}
+
+        # --- pass 1: flip schedule in original gate order -------------------
+        order = sorted(st.gate_ids)
+        flip_before: Dict[int, Dict[int, int]] = {}
+        for gid in order:
+            g = circuit.gates[gid]
+            flip_before[gid] = dict(flips)
+            nl_bits = [j for j, q in enumerate(g.qubits) if phys_of[q] >= L]
+            if nl_bits:
+                # structural flip detection: which non-local matrix bits are
+                # anti-diagonal (combo-independent)
+                _, flipped = specialize_gate(
+                    g.matrix, nl_bits, [0] * len(nl_bits)
+                )
+                for j in flipped:
+                    q = g.qubits[j]
+                    flips[q] = flips.get(q, 0) ^ 1
+
+        # --- pass 2: build ops per kernel -----------------------------------
+        ops: List[Op] = []
+        shm_groups = 0
+        for kern in st.kernels:
+            gids = sorted(kern.gate_ids)
+            if kern.kind == FUSION:
+                built = _build_fused(circuit, gids, kern.qubits, phys_of, L,
+                                     flip_before, dtype)
+                ops.extend(built)
+            elif kern.kind == SHM:
+                grp = shm_groups
+                shm_groups += 1
+                for gid in gids:
+                    for op in _build_fused(circuit, [gid], None, phys_of, L,
+                                           flip_before, dtype):
+                        op.shm_group = grp
+                        ops.append(op)
+            else:  # INSULAR_KIND: zero-footprint gates -> scalars (flips done)
+                for gid in gids:
+                    op = _build_scalar(circuit, gid, phys_of, L, flip_before, dtype)
+                    if op is not None:
+                        ops.append(op)
+
+        # --- remap to next stage --------------------------------------------
+        if si + 1 < len(plan.stages):
+            remap = _remap_spec(layout, plan.stages[si + 1].layout, flips)
+            flips = {}
+        else:
+            remap = None
+        programs.append(
+            StageProgram(ops=ops, layout=layout, remap_after=remap,
+                         n_shm_groups=shm_groups)
+        )
+
+    first_layout = plan.stages[0].layout
+    identity = tuple(range(n))
+    initial = None
+    if tuple(first_layout) != identity:
+        initial = _remap_spec(identity, first_layout, {})
+    final = None
+    last_layout = plan.stages[-1].layout
+    if tuple(last_layout) != identity or any(flips.values()):
+        final = _remap_spec(last_layout, identity, flips)
+    return CompiledCircuit(
+        n=n, L=L, R=plan.R, G=plan.G, programs=programs,
+        initial_remap=initial, final_remap=final, dtype=np.dtype(dtype),
+    )
+
+
+def _gate_bit_split(g: Gate, phys_of: Dict[int, int], L: int):
+    loc = [(j, phys_of[g.qubits[j]]) for j in range(g.n_qubits) if phys_of[g.qubits[j]] < L]
+    nl = [(j, phys_of[g.qubits[j]]) for j in range(g.n_qubits) if phys_of[g.qubits[j]] >= L]
+    return loc, nl
+
+
+def _build_fused(
+    circuit: Circuit,
+    gids: Sequence[int],
+    kernel_qubits: Optional[Tuple[int, ...]],
+    phys_of: Dict[int, int],
+    L: int,
+    flip_before: Dict[int, Dict[int, int]],
+    dtype,
+) -> List[Op]:
+    """Build the dep-batched fused tensor for one fusion kernel (or a single
+    gate when ``gids`` has one element). Splits the kernel if the dep set is
+    too large."""
+    gates = [circuit.gates[g] for g in gids]
+    # kernel local bits
+    if kernel_qubits is None:
+        kq: List[int] = sorted(
+            {phys_of[q] for g in gates for q in g.qubits if phys_of[q] < L}
+        )
+    else:
+        kq = sorted(kernel_qubits)
+    k = len(kq)
+    pos_in_kernel = {p: i for i, p in enumerate(kq)}
+    # dep bits: union of non-local physical bits
+    dep = sorted({phys_of[q] for g in gates for q in g.qubits if phys_of[q] >= L})
+    d = len(dep)
+    if k == 0:
+        # fully non-local kernel (can happen for 1-gate builds)
+        out = []
+        for gid in gids:
+            op = _build_scalar(circuit, gid, phys_of, L, flip_before, dtype)
+            if op is not None:
+                out.append(op)
+        return out
+    if (1 << d) * (1 << (2 * k)) > MAX_DEP_ENTRIES and len(gids) > 1:
+        # too many dep combos: apply member gates individually
+        out = []
+        for gid in gids:
+            out.extend(_build_fused(circuit, [gid], None, phys_of, L, flip_before, dtype))
+        return out
+    dep_pos = {p: i for i, p in enumerate(dep)}
+
+    T = np.zeros((1 << d, 1 << k, 1 << k), dtype=np.complex128)
+    ident = np.eye(1 << k, dtype=np.complex128)
+    for combo in range(1 << d):
+        U = ident
+        for g, gid in zip(gates, gids):
+            loc, nl = _gate_bit_split(g, phys_of, L)
+            fb = flip_before[gid]
+            values = [
+                ((combo >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0) for j, p in nl
+            ]
+            m_loc, _ = specialize_gate(g.matrix, [j for j, _ in nl], values)
+            if not loc:
+                # scalar contribution folded into U
+                U = m_loc[0, 0] * U
+                continue
+            positions = [pos_in_kernel[p] for _, p in loc]
+            U = embed_matrix(m_loc, positions, k) @ U
+        T[combo] = U
+    # diagonal detection
+    off = T - np.einsum("dij,ij->dij", T, np.eye(1 << k))
+    if np.abs(off).max() < 1e-12:
+        diag = np.ascontiguousarray(np.einsum("dii->di", T)).astype(dtype)
+        return [Op("diag", tuple(kq), tuple(dep), diag, tuple(gids))]
+    return [Op("fused", tuple(kq), tuple(dep), T.astype(dtype), tuple(gids))]
+
+
+def _build_scalar(
+    circuit: Circuit, gid: int, phys_of: Dict[int, int], L: int,
+    flip_before: Dict[int, Dict[int, int]], dtype,
+) -> Optional[Op]:
+    g = circuit.gates[gid]
+    loc, nl = _gate_bit_split(g, phys_of, L)
+    assert not loc, "scalar build requires zero local footprint"
+    dep = sorted(p for _, p in nl)
+    dep_pos = {p: i for i, p in enumerate(dep)}
+    fb = flip_before[gid]
+    vec = np.zeros((1 << len(dep),), dtype=np.complex128)
+    for combo in range(1 << len(dep)):
+        values = [
+            ((combo >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0) for j, p in nl
+        ]
+        m, _ = specialize_gate(g.matrix, [j for j, _ in nl], values)
+        vec[combo] = m[0, 0]
+    if np.allclose(vec, 1.0):
+        return None  # identity (e.g. pure control selection with U=I)
+    return Op("scalar", (), tuple(dep), vec.astype(dtype), (gid,))

@@ -1,0 +1,59 @@
+"""Dense single-device reference simulator (the oracle for every executor)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.circuit import Circuit
+from .apply import apply_matrix
+
+
+def zero_state(n: int, dtype=jnp.complex64) -> jnp.ndarray:
+    psi = jnp.zeros((2**n,), dtype=dtype)
+    return psi.at[0].set(1.0)
+
+
+def simulate(
+    circuit: Circuit,
+    psi0: Optional[jnp.ndarray] = None,
+    dtype=jnp.complex64,
+) -> jnp.ndarray:
+    """Apply every gate in order to the (flat) state vector; returns flat psi
+    with logical qubit q = index bit q."""
+    n = circuit.n_qubits
+    psi = zero_state(n, dtype) if psi0 is None else jnp.asarray(psi0, dtype=dtype)
+    view = psi.reshape((2,) * n)
+    for g in circuit.gates:
+        mat = jnp.asarray(g.matrix, dtype=dtype)
+        view = apply_matrix(view, mat, list(g.qubits))
+    return view.reshape(-1)
+
+
+def simulate_np(circuit: Circuit, psi0: Optional[np.ndarray] = None) -> np.ndarray:
+    """complex128 numpy oracle (exact-ish; for small n in tests)."""
+    n = circuit.n_qubits
+    if psi0 is None:
+        psi = np.zeros(2**n, dtype=np.complex128)
+        psi[0] = 1.0
+    else:
+        psi = np.asarray(psi0, dtype=np.complex128)
+    view = psi.reshape((2,) * n)
+    for g in circuit.gates:
+        k = g.n_qubits
+        mat_t = g.matrix.reshape((2,) * (2 * k))
+        state_axes = [n - 1 - b for b in g.qubits]
+        in_axes = [2 * k - 1 - j for j in range(k)]
+        out = np.tensordot(mat_t, view, axes=(in_axes, state_axes))
+        dest = [state_axes[k - 1 - i] for i in range(k)]
+        view = np.moveaxis(out, list(range(k)), dest)
+    return np.ascontiguousarray(view).reshape(-1)
+
+
+def fidelity(a: jnp.ndarray, b: jnp.ndarray) -> float:
+    a = np.asarray(a).reshape(-1)
+    b = np.asarray(b).reshape(-1)
+    return float(abs(np.vdot(a, b)))

@@ -1,0 +1,96 @@
+"""Gradient compression for the slow (DCN / inter-pod) axis.
+
+At 1000+ node scale the pod-level gradient sync crosses data-center network,
+~10-20x slower than ICI; compressing that hop is the standard lever. This
+module provides:
+
+* :func:`quantize_int8` / :func:`dequantize_int8` — per-block symmetric int8
+  quantization (block = trailing dim), 4x smaller wires than fp32;
+* :class:`ErrorFeedback` — residual accumulation so quantization error is
+  re-injected next step (EF-SGD; keeps convergence);
+* :func:`compressed_psum` — shard_map-compatible int8 all-reduce over a named
+  axis: quantize -> all_gather int8 -> dequantize+sum locally. For g pod
+  participants this moves g x int8 instead of 2x fp32 ring traffic — a win
+  for small g (pods), not for large ICI groups, which is exactly the DCN
+  shape (g = 2..8 pods).
+
+Wiring: for the pjit train step the gradient reduction is fused into
+backward by GSPMD, so compression applies when the pod axis is driven
+explicitly (shard_map data-parallel outer loop / multi-controller deployment).
+`launch/train.py` keeps the uncompressed default; the multi-pod deployment
+path uses `compressed_psum` over axis 'pod'.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class QuantState(NamedTuple):
+    q: jnp.ndarray  # int8 payload
+    scale: jnp.ndarray  # per-block fp32 scale
+
+
+def quantize_int8(x: jnp.ndarray) -> QuantState:
+    """Symmetric per-row int8 quantization over the trailing dim."""
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return QuantState(q=q, scale=scale)
+
+
+def dequantize_int8(qs: QuantState, dtype=jnp.float32) -> jnp.ndarray:
+    return (qs.q.astype(jnp.float32) * qs.scale).astype(dtype)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # pytree matching grads
+
+    @staticmethod
+    def init(grads) -> "ErrorFeedback":
+        return ErrorFeedback(
+            residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        )
+
+
+def compress_with_feedback(
+    grads, ef: ErrorFeedback
+) -> Tuple[Any, Any, ErrorFeedback]:
+    """Returns (quantized pytree, dequantized-for-use pytree, new feedback).
+
+    The residual (what int8 could not represent) is added back before the
+    next quantization, so the long-run average is unbiased.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        qs = quantize_int8(corrected)
+        deq = dequantize_int8(qs)
+        return qs, deq, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qs_tree = treedef.unflatten([o[0] for o in out])
+    deq_tree = treedef.unflatten([o[1] for o in out])
+    new_ef = ErrorFeedback(residual=treedef.unflatten([o[2] for o in out]))
+    return qs_tree, deq_tree, new_ef
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8 mean-reduce over a (small, slow) named axis inside shard_map.
+
+    quantize locally -> all_gather int8 payloads -> dequantize and average
+    locally. Wire bytes: g x (n/4 + n/blocksize) fp32-equivalents vs
+    2 x n fp32 for a ring all-reduce.
+    """
+    qs = quantize_int8(x)
+    qg = lax.all_gather(qs.q, axis_name)  # [g, ...] int8
+    sg = lax.all_gather(qs.scale, axis_name)
+    g = qg.shape[0]
+    deq = qg.astype(jnp.float32) * sg
+    return (jnp.sum(deq, axis=0) / g).astype(x.dtype)

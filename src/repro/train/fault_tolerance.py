@@ -1,0 +1,72 @@
+"""Fault-tolerance utilities: straggler detection + restart bookkeeping.
+
+On a real multi-pod fleet the monitor's flag would trigger hot-spare
+substitution / slice reconfiguration; here it feeds the training log and the
+fault-tolerance tests (kill-and-resume via CheckpointManager).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA step-time monitor. Flags steps slower than ``threshold`` x the
+    moving average (collective-synchronized training makes every worker see
+    the straggler, so a single-process monitor is representative)."""
+
+    alpha: float = 0.1
+    threshold: float = 2.0
+    warmup: int = 3
+    ewma: float = 0.0
+    n: int = 0
+    flagged: List[int] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            self.ewma = dt if self.ewma == 0.0 else 0.5 * (self.ewma + dt)
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.flagged.append(step)
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+@dataclass
+class RunJournal:
+    """Crash-safe run journal: records progress so a restarted job can verify
+    it resumed from the right step (and count restarts)."""
+
+    path: str
+
+    def read(self) -> Dict:
+        if not os.path.exists(self.path):
+            return {"restarts": 0, "last_step": -1}
+        with open(self.path) as f:
+            return json.load(f)
+
+    def update(self, step: int, **extra) -> None:
+        d = self.read()
+        d["last_step"] = step
+        d.update(extra)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(d, f)
+        os.replace(tmp, self.path)
+
+    def mark_restart(self) -> int:
+        d = self.read()
+        d["restarts"] = d.get("restarts", 0) + 1
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(d, f)
+        os.replace(tmp, self.path)
+        return d["restarts"]

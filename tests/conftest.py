@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: the dry-run's 512-device XLA flag is NEVER set here
+— tests run with the default single CPU device (distributed tests spawn
+subprocesses with their own XLA_FLAGS)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,85 @@
+"""Core tests: gates, insularity, generators (Table I calibration)."""
+
+import numpy as np
+import pytest
+
+from repro.core import gates as G
+from repro.core import generators as gen
+from repro.core.circuit import Circuit, full_matrix
+from repro.core.generators import FAMILIES, TABLE_I
+
+
+@pytest.mark.parametrize("name", sorted(G.GATE_DEFS))
+def test_gates_unitary(name):
+    gd = G.GATE_DEFS[name]
+    params = [0.7] * gd.n_params
+    m = G.gate_matrix(name, params)
+    assert m.shape == (2**gd.n_qubits,) * 2
+    np.testing.assert_allclose(m @ m.conj().T, np.eye(m.shape[0]), atol=1e-12)
+
+
+def test_insularity_basics():
+    # diagonal gates: insular
+    assert G.insular_mask(G.gate_matrix("rz", [0.3])) == (True,)
+    assert G.insular_mask(G.gate_matrix("p", [0.3])) == (True,)
+    assert G.insular_mask(G.Z) == (True,)
+    # anti-diagonal: insular
+    assert G.insular_mask(G.X) == (True,)
+    assert G.insular_mask(G.Y) == (True,)
+    # mixing: non-insular
+    assert G.insular_mask(G.H) == (False,)
+    assert G.insular_mask(G.gate_matrix("rx", [0.3])) == (False,)
+    # cx: target non-insular, control insular
+    assert G.insular_mask(G.CX, n_controls=1) == (False, True)
+    # cz is fully diagonal -> both insular
+    assert G.insular_mask(G.CZ, n_controls=1) == (True, True)
+    # cp fully insular
+    assert G.insular_mask(G.gate_matrix("cp", [0.4]), n_controls=1) == (True, True)
+    # rzz diagonal -> both insular
+    assert G.insular_mask(G.gate_matrix("rzz", [0.4])) == (True, True)
+    # swap: nothing insular
+    assert G.insular_mask(G.SWAP) == (False, False)
+    # ccx: two controls insular
+    assert G.insular_mask(G.CCX, n_controls=2) == (False, True, True)
+
+
+def test_controlled_embedding():
+    c = Circuit(3)
+    c.add("ccx", 0, 1, 2)  # target 0, controls 1, 2
+    u = c.unitary()
+    # |110> (idx 6) <-> |111> (idx 7) swapped; everything else identity
+    expect = np.eye(8)
+    expect[6, 6] = expect[7, 7] = 0
+    expect[6, 7] = expect[7, 6] = 1
+    np.testing.assert_allclose(u, expect, atol=1e-12)
+
+
+@pytest.mark.parametrize("fam", sorted(TABLE_I))
+def test_table1_gate_counts(fam):
+    for n, want in TABLE_I[fam].items():
+        got = FAMILIES[fam](n).n_gates
+        assert abs(got - want) <= 2, f"{fam}@{n}: {got} vs Table I {want}"
+
+
+def test_dependencies():
+    c = Circuit(3)
+    c.add("h", 0).add("cx", 1, 0).add("h", 2).add("cx", 2, 1)
+    deps = c.dependencies()
+    assert (0, 1) in deps and (2, 3) in deps and (1, 3) in deps
+    assert (0, 2) not in deps
+
+
+def test_circuit_json_roundtrip():
+    c = gen.random_circuit(6, 40, seed=3)
+    c2 = Circuit.from_json(c.to_json())
+    assert c2.n_gates == c.n_gates
+    assert all(a.name == b.name and a.qubits == b.qubits for a, b in zip(c.gates, c2.gates))
+
+
+def test_full_matrix_matches_unitary_composition():
+    rng = np.random.default_rng(0)
+    c = gen.random_circuit(4, 12, seed=5)
+    u = np.eye(16, dtype=complex)
+    for g in c.gates:
+        u = full_matrix(g, 4) @ u
+    np.testing.assert_allclose(u, c.unitary(), atol=1e-12)

@@ -1,0 +1,110 @@
+"""Kernelization tests: Constraint 1 validity, Thm. 6, cost model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generators as gen
+from repro.core.cost_model import FUSION, SHM, CostModel, DEFAULT_COST_MODEL
+from repro.core.kernelization import (
+    greedy_kernelize,
+    items_from_gates,
+    kernelize,
+    ordered_kernelize,
+    validate_kernelization,
+)
+
+
+@pytest.mark.parametrize("fam", ["ghz", "qft", "qsvm", "ising", "wstate", "ae"])
+def test_kernelize_valid_and_beats_ordered(fam):
+    c = gen.FAMILIES[fam](12)
+    items = items_from_gates(c.gates)
+    dp = kernelize(items, 12, prune_T=200)
+    od = ordered_kernelize(items, 12)
+    gr = greedy_kernelize(items, 12)
+    for r in (dp, od, gr):
+        validate_kernelization(c, r.kernels, c.n_gates)
+    # Thm. 6: KERNELIZE <= OrderedKernelize; both should beat greedy packing
+    assert dp.total_cost <= od.total_cost + 1e-6
+    assert dp.total_cost <= gr.total_cost + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_circuit_kernelize_property(seed):
+    c = gen.random_circuit(8, 40, seed=seed)
+    items = items_from_gates(c.gates)
+    dp = kernelize(items, 8, prune_T=100)
+    od = ordered_kernelize(items, 8)
+    validate_kernelization(c, dp.kernels, c.n_gates)
+    validate_kernelization(c, od.kernels, c.n_gates)
+    assert dp.total_cost <= od.total_cost + 1e-6
+
+
+def test_kernel_size_limits():
+    cm = DEFAULT_COST_MODEL
+    c = gen.qft(14)
+    items = items_from_gates(c.gates)
+    r = kernelize(items, 14, prune_T=200)
+    for k in r.kernels:
+        if k.kind == FUSION:
+            assert k.n_qubits <= cm.max_fusion_qubits
+        elif k.kind == SHM:
+            assert len(set(k.qubits) | set(range(cm.io_qubits))) <= cm.max_shm_qubits
+
+
+def test_cost_model_shape():
+    cm = DEFAULT_COST_MODEL
+    # fusion cost flat in the memory-bound regime, exponential later
+    assert cm.fusion_cost(1) == cm.fusion_cost(5)  # both memory-bound
+    assert cm.fusion_cost(8) == float("inf")  # over MXU tile budget
+    assert cm.best_fusion_size() == cm.max_fusion_qubits
+    assert cm.shm_gate_cost(True) < cm.shm_gate_cost(False)
+
+
+def test_pruning_threshold_tradeoff():
+    """Larger T must not give a worse plan (App. B-f / Fig. 13 trend)."""
+    c = gen.qft(12)
+    items = items_from_gates(c.gates)
+    costs = [kernelize(items, 12, prune_T=t).total_cost for t in (4, 64, 500)]
+    assert costs[2] <= costs[0] + 1e-6
+
+
+def test_items_respect_dependencies():
+    c = gen.qsvm(10)
+    items = items_from_gates(c.gates)
+    # all gates covered exactly once
+    gids = sorted(g for it in items for g in it.gate_ids)
+    non_footprint = [i for i, g in enumerate(c.gates) if not g.qubits]
+    assert gids == [i for i in range(c.n_gates) if i not in non_footprint]
+
+
+def test_hhl_case_study_many_gates():
+    """App. C2: gates >> qubits — KERNELIZE stays linear-time, valid, and
+    <= OrderedKernelize."""
+    from repro.core.generators import hhl
+
+    c = hhl(7, 28)
+    assert c.n_gates > 5 * 28
+    items = items_from_gates(c.gates)
+    dp = kernelize(items, 28, prune_T=64)
+    od = ordered_kernelize(items, 28)
+    validate_kernelization(c, dp.kernels, c.n_gates)
+    assert dp.total_cost <= od.total_cost + 1e-6
+
+
+def test_synthetic_cost_model_switches_kernel_kind():
+    """With very cheap shm gates the DP should prefer shm kernels; with very
+    expensive ones, fusion kernels."""
+    c = gen.ising(10)
+    items_cheap = items_from_gates(
+        c.gates, cm=CostModel(shm_gate_us=0.01, shm_diag_gate_us=0.005))
+    r_cheap = kernelize(items_cheap, 10,
+                        cm=CostModel(shm_gate_us=0.01, shm_diag_gate_us=0.005),
+                        prune_T=100)
+    kinds_cheap = {k.kind for k in r_cheap.kernels}
+    expensive = CostModel(shm_gate_us=1e9, shm_diag_gate_us=1e9)
+    items_exp = items_from_gates(c.gates, cm=expensive)
+    r_exp = kernelize(items_exp, 10, cm=expensive, prune_T=100)
+    assert SHM in kinds_cheap
+    assert all(k.kind != SHM for k in r_exp.kernels)

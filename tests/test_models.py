@@ -1,0 +1,179 @@
+"""Model substrate tests: per-arch smokes, attention/SSM/MoE correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, input_specs, shape_applicable
+from repro.configs.registry import ARCHS, get_arch
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.moe import moe_apply, moe_params
+from repro.models.ssm import ssd_chunked
+from repro.models.transformer import Model, body_structure
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model),
+                                            jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(KEY, (b, cfg.encoder_seq, cfg.d_model),
+                                             jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_train(name):
+    cfg = get_arch(name).reduced()
+    m = Model(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    loss, metrics = m.loss(params, batch)
+    assert jnp.isfinite(loss), f"{name}: loss not finite"
+    logits, aux, _, _ = m.forward(params, batch["tokens"],
+                                  extras={k: v for k, v in batch.items()
+                                          if k in ("frames", "patches")} or None)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b", "whisper-base",
+                                  "deepseek-v2-lite-16b"])
+def test_arch_smoke_decode(name):
+    cfg = get_arch(name).reduced()
+    m = Model(cfg, remat=False)
+    params = m.init(KEY)
+    batch = _batch(cfg, b=2, s=8)
+    extras = {k: v for k, v in batch.items() if k in ("frames", "patches")} or None
+    logits, cache = m.prefill(params, batch["tokens"], extras=extras, cache_len=16)
+    assert logits.shape == (2, cfg.padded_vocab)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(3):
+        logits, cache = m.decode_step(params, tok, cache, extras=extras)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache["len"]) == 8 + 3
+
+
+def test_decode_matches_forward():
+    """Greedy decode step-by-step must agree with a full forward pass."""
+    cfg = get_arch("qwen2-1.5b").reduced()
+    m = Model(cfg, remat=False)
+    params = m.init(KEY)
+    toks = jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size)
+    logits_full, _, _, _ = m.forward(params, toks)
+    last_prefill, cache = m.prefill(params, toks[:, :8], cache_len=16)
+    np.testing.assert_allclose(
+        np.asarray(last_prefill, dtype=np.float32),
+        np.asarray(logits_full[:, 7], dtype=np.float32), atol=2e-2, rtol=2e-2)
+    # decode the next tokens and compare logits
+    logits, cache = m.decode_step(params, toks[:, 8:9], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits, dtype=np.float32),
+        np.asarray(logits_full[:, 8], dtype=np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_ssm_decode_matches_forward():
+    cfg = get_arch("mamba2-1.3b").reduced()
+    m = Model(cfg, remat=False)
+    params = m.init(KEY)
+    toks = jax.random.randint(KEY, (1, 12), 0, cfg.vocab_size)
+    logits_full, _, _, _ = m.forward(params, toks)
+    last, cache = m.prefill(params, toks[:, :8], cache_len=16)
+    logits, cache = m.decode_step(params, toks[:, 8:9], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(logits_full[:, 8], np.float32),
+        atol=3e-2, rtol=3e-2)
+
+
+def test_chunked_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    b, s, h, d = 2, 37, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    out = chunked_attention(q, k, v, causal=True, q_block=16, kv_block=8)
+    # naive reference
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(d)
+    mask = np.tril(np.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_decode_attention_matches_softmax():
+    rng = np.random.default_rng(1)
+    b, s, h, d = 2, 9, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    out = decode_attention(q, k, v, cache_len=6)
+    scores = jnp.einsum("bhd,bshd->bhs", q[:, 0], k) / np.sqrt(d)
+    scores = jnp.where(np.arange(s)[None, None] < 6, scores, -1e30)
+    ref = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(scores, -1), v)[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_ssd_chunked_matches_recurrence():
+    """Chunked SSD == naive per-step recurrence h' = a h + B x, y = C h."""
+    rng = np.random.default_rng(2)
+    b, s, h, p, n = 1, 23, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    a_log = jnp.asarray(-np.abs(rng.normal(size=(b, s, h))), jnp.float32) * 0.3
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y, hN = ssd_chunked(x, a_log, B, C, chunk=8)
+
+    hstate = np.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        a = np.exp(np.asarray(a_log[:, t]))  # [b, h]
+        hstate = hstate * a[:, :, None, None] + np.einsum(
+            "bn,bhp->bhpn", np.asarray(B[:, t]), np.asarray(x[:, t]))
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(C[:, t]), hstate))
+    ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hN), hstate, atol=1e-3, rtol=1e-3)
+
+
+def test_moe_invariants():
+    cfg = get_arch("deepseek-v2-lite-16b").reduced()
+    p = moe_params(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    y, aux = moe_apply(p, x, cfg, mesh=None)
+    assert y.shape == x.shape
+    assert jnp.isfinite(aux) and float(aux) >= 0
+    # zero input -> zero routed output + shared expert of zeros = zeros
+    y0, _ = moe_apply(p, jnp.zeros_like(x), cfg, mesh=None)
+    np.testing.assert_allclose(np.asarray(y0), 0.0, atol=1e-6)
+
+
+def test_body_structure_full_configs():
+    ds = get_arch("deepseek-v3-671b")
+    pk, uk, reps = body_structure(ds)
+    assert len(pk) == 3 and uk == ("attn+moe",) and reps == 58
+    jm = get_arch("jamba-1.5-large-398b")
+    pk, uk, reps = body_structure(jm)
+    assert len(uk) == 8 and reps == 9
+    assert sum(1 for k in uk if k.startswith("attn")) == 1
+    assert sum(1 for k in uk if "+moe" in k) == 4
+    lv = get_arch("llama-3.2-vision-11b")
+    pk, uk, reps = body_structure(lv)
+    assert len(uk) == 5 and reps == 8
+    assert sum(1 for k in uk if "+cross" in k) == 1
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_shape_applicability(name):
+    cfg = get_arch(name)
+    ok_500k, why = shape_applicable(cfg, SHAPES["long_500k"])
+    assert ok_500k == (cfg.ssm), why
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        ok, _ = shape_applicable(cfg, SHAPES[s])
+        assert ok

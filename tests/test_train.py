@@ -1,0 +1,141 @@
+"""Training-substrate tests: optimizer math, checkpointing, fault tolerance,
+data determinism, end-to-end loss decrease."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import SyntheticConfig, SyntheticDataset
+from repro.optim import adamw
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import RunJournal, StragglerMonitor
+
+
+def test_adamw_matches_reference():
+    """One step of our AdamW (fp32 moments) vs a hand-rolled numpy Adam."""
+    cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=1_000_000,
+                            weight_decay=0.0, clip_norm=1e9,
+                            moment_dtype="float32", min_lr_frac=1.0)
+    params = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]])}
+    grads = {"w": jnp.array([[0.1, -0.2], [0.3, 0.4]])}
+    state = adamw.init(cfg, params)
+    new_p, state, _ = adamw.update(cfg, grads, state, params)
+
+    g = np.array([[0.1, -0.2], [0.3, 0.4]])
+    m = 0.1 * g
+    v = 0.05 * g * g
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    ref = np.array([[1.0, -2.0], [0.5, 3.0]]) - 1e-2 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, atol=1e-6)
+
+
+def test_adamw_clip_and_decay():
+    cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=0, clip_norm=0.1,
+                            weight_decay=0.5, min_lr_frac=1.0, total_steps=10**6)
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.ones((4, 4)) * 100.0}
+    state = adamw.init(cfg, params)
+    _, _, metrics = adamw.update(cfg, grads, state, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_checkpoint_roundtrip_bf16():
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d, keep=2)
+        state = {
+            "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": {"c": jnp.ones((3,), jnp.float32), "s": jnp.zeros((), jnp.int32)},
+        }
+        ck.save(1, state, blocking=True)
+        ck.save(2, state, blocking=True)
+        ck.save(3, state, blocking=True)
+        assert ck.all_steps() == [2, 3]  # keep=2 garbage-collects step 1
+        out = ck.restore(3, state)
+        assert out["a"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
+                                      np.asarray(state["a"], np.float32))
+
+
+def test_checkpoint_async_then_restore():
+    with tempfile.TemporaryDirectory() as d:
+        ck = CheckpointManager(d, keep=3, async_save=True)
+        state = {"w": jnp.ones((8, 8))}
+        ck.save(5, state)
+        ck.wait()
+        step, out = ck.restore_latest(state)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((8, 8)))
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, warmup=2)
+    for i in range(5):
+        assert not mon.record(i, 0.1)
+    assert mon.record(5, 0.5)  # 5x slower -> flagged
+    assert mon.flagged == [5]
+    assert not mon.record(6, 0.11)
+
+
+def test_run_journal_restarts():
+    with tempfile.TemporaryDirectory() as d:
+        j = RunJournal(os.path.join(d, "journal.json"))
+        j.update(10)
+        assert j.read()["last_step"] == 10
+        assert j.mark_restart() == 1
+        assert j.mark_restart() == 2
+
+
+def test_data_determinism_and_signal():
+    cfg = SyntheticConfig(vocab_size=101, seq_len=32, global_batch=4, seed=7)
+    a = SyntheticDataset(cfg).batch(3)
+    b = SyntheticDataset(cfg).batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    # labels are next-token shifted
+    full_a = np.concatenate([a["tokens"], a["labels"][:, -1:]], axis=1)
+    np.testing.assert_array_equal(full_a[:, 1:-1], a["labels"][:, :-1])
+    # different steps differ
+    c = SyntheticDataset(cfg).batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+@pytest.mark.slow
+def test_training_loss_decreases():
+    from repro.launch import train as train_mod
+
+    with tempfile.TemporaryDirectory() as d:
+        hist = train_mod.main([
+            "--arch", "qwen2-1.5b", "--reduced", "--steps", "120",
+            "--global-batch", "8", "--seq", "64", "--lr", "2e-3",
+            "--log-every", "10", "--metrics-out", os.path.join(d, "m.json"),
+        ])
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    assert last < first - 0.3, f"no learning: {first:.3f} -> {last:.3f}"
+
+
+@pytest.mark.slow
+def test_resume_after_simulated_failure():
+    from repro.launch import train as train_mod
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = os.path.join(d, "ckpt")
+        train_mod.main([
+            "--arch", "qwen2-1.5b", "--reduced", "--steps", "20",
+            "--global-batch", "4", "--seq", "32", "--ckpt-dir", ck,
+            "--ckpt-every", "10", "--log-every", "10",
+        ])
+        # "crash" happened; resume to 30
+        train_mod.main([
+            "--arch", "qwen2-1.5b", "--reduced", "--steps", "30",
+            "--global-batch", "4", "--seq", "32", "--ckpt-dir", ck,
+            "--ckpt-every", "10", "--log-every", "10",
+        ])
+        j = RunJournal(os.path.join(ck, "journal.json")).read()
+        assert j["restarts"] == 1
+        assert j["last_step"] == 30
