@@ -1,0 +1,105 @@
+"""Measurement-subsystem benchmark: shots / marginals / Pauli expectations.
+
+Times the consumer-facing result API against the naive "gather the full
+state and post-process on one host" baseline. The mechanism under test:
+sampling touches one ``2^L`` shard row per *distinct* sampled shard (plus a
+``2^(R+G)`` mass vector), so its cost is ~independent of gate count and far
+below a full-state gather once shots << 2^n; marginals and expectations are
+single fused reductions (one streaming pass per host shard on the offload
+backend).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.generators import FAMILIES
+from repro.core.partition import partition
+from repro.sim.measure import (
+    DenseMeasurer,
+    ShardedMeasurer,
+    StreamingMeasurer,
+    expectation_np,
+    marginal_np,
+)
+from repro.sim.executor import StagedExecutor
+from repro.sim.offload import OffloadedExecutor
+
+OBS = "Z0 Z1 + 0.5*X2 - 1.5*Y0 X3"
+MARGINAL = (0, 1, 2, 3)
+
+
+def run(fam: str = "qft", ns=(14, 16, 18), L: int = 12, shots: int = 4096) -> List[Dict]:
+    rows = []
+    for n in ns:
+        c = FAMILIES[fam](n)
+        Lq = min(L, n - 2)
+        plan = partition(c, Lq, n - Lq - 1, 1, time_limit=30)
+
+        for backend in ("pjit", "offload"):
+            if backend == "pjit":
+                ex = StagedExecutor(c, plan)
+                t0 = time.time()
+                state = ex.run_packed()
+                state.block_until_ready()
+                t_sim = time.time() - t0
+                meas = ShardedMeasurer(state, ex.measurement_frame)
+            else:
+                ex = OffloadedExecutor(c, plan)
+                t0 = time.time()
+                state = ex.run(apply_final_remap=False)
+                t_sim = time.time() - t0
+                meas = StreamingMeasurer(state, ex.measurement_frame)
+
+            t0 = time.time()
+            meas.sample(shots, seed=0)
+            t_sample = time.time() - t0
+            t0 = time.time()
+            meas.marginal(MARGINAL)
+            t_marginal = time.time() - t0
+            t0 = time.time()
+            meas.expectation(OBS)
+            t_expect = time.time() - t0
+
+            # baseline: gather everything, post-process dense on one host
+            t0 = time.time()
+            full = np.asarray(state).reshape(-1)
+            dm = DenseMeasurer(full, meas.frame)
+            dm.sample(shots, seed=0)
+            marginal_np(full, MARGINAL)  # frame-blind; timing-only baseline
+            expectation_np(full, OBS)
+            t_gather = time.time() - t0
+
+            rows.append({
+                "family": fam, "n": n, "L": Lq, "backend": backend,
+                "shots": shots, "sim_s": t_sim, "sample_s": t_sample,
+                "marginal_s": t_marginal, "expect_s": t_expect,
+                "gather_baseline_s": t_gather,
+            })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="qft")
+    ap.add_argument("--min-n", type=int, default=14)
+    ap.add_argument("--max-n", type=int, default=16)
+    ap.add_argument("--L", type=int, default=12)
+    ap.add_argument("--shots", type=int, default=4096)
+    args = ap.parse_args(argv)
+    rows = run(args.family, range(args.min_n, args.max_n + 1), args.L, args.shots)
+    print("family,n,L,backend,shots,sim_s,sample_s,marginal_s,expect_s,"
+          "gather_baseline_s")
+    for r in rows:
+        print(f"{r['family']},{r['n']},{r['L']},{r['backend']},{r['shots']},"
+              f"{r['sim_s']:.3f},{r['sample_s']:.4f},{r['marginal_s']:.4f},"
+              f"{r['expect_s']:.4f},{r['gather_baseline_s']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Harness -> paper artifact map:
   bench_e2e        -> Fig. 5 (weak scaling, distributed executor)
   bench_offload    -> Fig. 7 / Fig. 8 (DRAM offloading vs QDAO-style)
   bench_breakdown  -> Fig. 6 (comm/comp breakdown)
+  bench_sampling   -> measurement subsystem (shots/marginals/expectations)
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -24,7 +25,8 @@ def main() -> None:
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument(
         "--skip", default="sim_dryrun",
-        help="comma list: staging,kernelize,e2e,offload,breakdown,sim_dryrun",
+        help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
+             "sim_dryrun",
     )
     args = ap.parse_args()
     skip = set(args.skip.split(",")) if args.skip else set()
@@ -89,6 +91,17 @@ def main() -> None:
         bench_breakdown.main([])
         dt = time.time() - t0
         summary.append(("bench_breakdown", 1e6 * dt / 3, "roofline-derived"))
+
+    if "sampling" not in skip:
+        section("bench_sampling (measurement: shots/marginals/expectations)")
+        from . import bench_sampling
+
+        t0 = time.time()
+        rows = bench_sampling.main([])
+        dt = time.time() - t0
+        worst = max(r["sample_s"] for r in rows)
+        summary.append(("bench_sampling", 1e6 * dt / max(len(rows), 1),
+                        f"worst_sample_s={worst:.3f}"))
 
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")

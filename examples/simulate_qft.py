@@ -20,6 +20,7 @@ import numpy as np
 from repro.core.generators import qft
 from repro.core.partition import partition
 from repro.sim.executor import StagedExecutor
+from repro.sim.measure import expectation_np, marginal_np, simulate_and_measure
 from repro.sim.offload import OffloadedExecutor
 from repro.sim.shardmap_executor import ShardMapExecutor
 from repro.sim.statevector import fidelity, simulate
@@ -58,6 +59,26 @@ def main():
         f = fidelity(out, ref)
         print(f"  fidelity[{name}] = {f:.8f}")
         assert f > 0.9999, name
+
+    # --- measurement API: consume the state through shots / marginals /
+    # Pauli expectations instead of gathering 2^n amplitudes. The planned
+    # backends measure in the final stage's layout (no closing remap).
+    print("\nmeasurement (512 shots, marginal over qubits 0-2, <Z0 Z1 + 0.5*X0>):")
+    obs = "Z0 Z1 + 0.5*X0"
+    e_ref = expectation_np(ref, obs)
+    m_ref = marginal_np(ref, (0, 1, 2))
+    for backend in ("shardmap", "pjit", "offload"):
+        res = simulate_and_measure(
+            circuit, backend=backend, plan=plan if backend != "offload" else None,
+            L=L, R=(R if backend != "offload" else n - L),
+            G=(G if backend != "offload" else 0),
+            shots=512, seed=0, marginals=[(0, 1, 2)], observables=obs)
+        e = res.expectation(obs)  # accessor canonicalizes the key
+        m = res.marginal((0, 1, 2))
+        top = ", ".join(f"{b}:{c}" for b, c in res.top(3))
+        print(f"  {backend:9s} <obs>={e:+.6f} (ref {e_ref:+.6f})  top: {top}")
+        assert abs(e - e_ref) < 1e-4, backend
+        assert np.abs(m - m_ref).max() < 1e-5, backend
     print("OK")
 
 

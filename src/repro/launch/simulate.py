@@ -5,6 +5,12 @@ Examples (CPU):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 22 \
       --L 19 --R 2 --G 1 --executor shardmap
+
+Measurement (shots / marginals / Pauli expectations — the result API; no
+backend gathers the 2^n probability vector to one device):
+  PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 20 \
+      --L 17 --R 3 --executor offload --shots 1024 \
+      --marginal 0,1,2 --observable "Z0 Z1 + 0.5*X2"
 """
 
 from __future__ import annotations
@@ -33,6 +39,12 @@ def main(argv=None):
     ap.add_argument("--kernelizer", default="dp", choices=["dp", "ordered", "greedy"])
     ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--check", action="store_true", help="fidelity vs dense ref")
+    ap.add_argument("--shots", type=int, default=0, help="sample N bitstrings")
+    ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
+    ap.add_argument("--marginal", action="append", default=[],
+                    help="comma-separated qubit subset (repeatable)")
+    ap.add_argument("--observable", action="append", default=[],
+                    help='Pauli sum, e.g. "Z0 Z1 + 0.5*X2" (repeatable)')
     args = ap.parse_args(argv)
 
     n = args.n
@@ -46,7 +58,9 @@ def main(argv=None):
     print(f"partition: {plan.n_stages} stages, kernel cost {plan.total_kernel_cost:,.0f} us"
           f" (preprocess {plan.preprocess_time_s:.2f}s)")
 
+    measuring = bool(args.shots or args.marginal or args.observable)
     t0 = time.time()
+    measurer = None
     if args.executor == "pjit":
         from ..sim.executor import StagedExecutor
 
@@ -57,28 +71,64 @@ def main(argv=None):
             rm = 1 << (args.R - args.R // 2)
             mesh = jax.make_mesh((1 << args.G, rd, rm), ("pod", "data", "model"))
         ex = StagedExecutor(circ, plan, mesh=mesh)
-        out = ex.run()
+        out = ex.run_packed() if measuring else ex.run()
     elif args.executor == "shardmap":
         from ..sim.shardmap_executor import ShardMapExecutor
 
         ex = ShardMapExecutor(circ, plan, use_pallas=args.pallas)
-        out = ex.run()
+        out = ex.run_packed() if measuring else ex.run()
     elif args.executor == "offload":
         from ..sim.offload import OffloadedExecutor
 
         ex = OffloadedExecutor(circ, plan)
-        out = ex.run()
+        out = ex.run(apply_final_remap=not measuring)
     else:
         from ..sim.offload import PerGateOffloadExecutor
 
         ex = PerGateOffloadExecutor(circ, L)
         out = ex.run()
-    out = np.asarray(jax.block_until_ready(out)) if not isinstance(out, np.ndarray) else out
+    if measuring:
+        from ..sim.measure import Frame, measurer_for
+
+        # measured runs stay distributed/packed: never gather 2^n amplitudes
+        out = jax.block_until_ready(out) if not isinstance(out, np.ndarray) else out
+        frame = (ex.measurement_frame if args.executor != "pergate"
+                 else Frame.identity(n))
+        measurer = measurer_for(out, frame)
+    else:
+        out = np.asarray(jax.block_until_ready(out)) if not isinstance(out, np.ndarray) else out
     dt = time.time() - t0
     print(f"simulated in {dt:.3f}s ({circ.n_gates / dt:,.0f} gates/s, "
           f"{2**n / dt / 1e6:,.1f} Mamps/s)")
 
+    if measurer is not None:
+        from ..sim.measure import measure_to_result
+
+        t0 = time.time()
+        res = measure_to_result(
+            measurer, backend=args.executor, shots=args.shots, seed=args.seed,
+            marginals=[tuple(int(q) for q in spec.split(","))
+                       for spec in args.marginal],
+            observables=args.observable,
+        )
+        print(f"measured in {time.time() - t0:.3f}s")
+        if args.shots:
+            top = ", ".join(f"{b}:{c}" for b, c in res.top(8))
+            print(f"  top counts ({args.shots} shots): {top}")
+        for qs, m in res.marginals.items():
+            head = np.array2string(m[:8], precision=4, suppress_small=True)
+            print(f"  marginal{qs}: {head}{' ...' if m.size > 8 else ''}")
+        for name, val in res.expectations.items():
+            print(f"  <{name}> = {val:+.6f}")
+        if not (args.check and n <= 24):
+            return res
+
     if args.check and n <= 24:
+        if measurer is not None:
+            # measured runs keep the final-stage layout; re-run with the
+            # final remap applied for the logical-order fidelity check
+            out = ex.run() if args.executor != "pergate" else out
+            out = np.asarray(jax.block_until_ready(out)) if not isinstance(out, np.ndarray) else out
         ref = simulate(circ)
         print(f"fidelity vs dense reference: {fidelity(out, ref):.6f}")
     return out

@@ -86,7 +86,7 @@ def moe_apply(
         aux = e * jnp.sum(me * ce)
         aux = lax.pmean(aux, data_axes)
 
-        ep = lax.axis_size(model_axis)
+        ep = lax.psum(1, model_axis)  # static axis size (jax<0.4.32 compat)
         my = lax.axis_index(model_axis)
         e_loc = e // ep
         cap = max(int(np.ceil(t * k / e * cf)), 1)

@@ -139,7 +139,9 @@ class StagedExecutor:
             )
         else:
             self.sharding = None
-        self._fn = jax.jit(self._run, donate_argnums=(0,) if donate else ())
+        donate = (0,) if donate else ()
+        self._fn = jax.jit(lambda x: self._run(x, True), donate_argnums=donate)
+        self._fn_packed = jax.jit(lambda x: self._run(x, False), donate_argnums=donate)
 
     # ------------------------------------------------------------------ run
     def _wsc(self, x):
@@ -155,7 +157,7 @@ class StagedExecutor:
             x = apply_op(x, op, G, R, L, self.dtype)
         return x
 
-    def _run(self, psi_packed: jnp.ndarray) -> jnp.ndarray:
+    def _run(self, psi_packed: jnp.ndarray, apply_final: bool = True) -> jnp.ndarray:
         n, G, R, L = self.n, self.G, self.R, self.L
         x = self._wsc(psi_packed.reshape((1 << G, 1 << R) + (2,) * L))
         if self.cc.initial_remap is not None:
@@ -164,7 +166,7 @@ class StagedExecutor:
             x = self._apply_local_ops(x, prog)
             if prog.remap_after is not None:
                 x = self._wsc(apply_remap(x, prog.remap_after, n, G, R, L))
-        if self.cc.final_remap is not None:
+        if apply_final and self.cc.final_remap is not None:
             x = self._wsc(apply_remap(x, self.cc.final_remap, n, G, R, L))
         return x.reshape(1 << G, 1 << R, 1 << L)
 
@@ -181,6 +183,30 @@ class StagedExecutor:
             packed = jax.device_put(packed, self.sharding)
         out = self._fn(packed)
         return out.reshape(-1)
+
+    # ---------------------------------------------------------- measurement
+    def run_packed(self, psi0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Run but *skip the final inter-stage remap*: returns the packed
+        ``[2^G, 2^R, 2^L]`` state in the last stage's physical layout (with
+        lazy flips still pending). Pair with :attr:`measurement_frame` and
+        :mod:`repro.sim.measure` — sampling/marginals/expectations undo the
+        layout on indices, which is far cheaper than permuting 2^n
+        amplitudes."""
+        n = self.n
+        if psi0 is None:
+            psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
+        packed = jnp.asarray(psi0, dtype=self.dtype).reshape(
+            (1 << self.G, 1 << self.R, 1 << self.L)
+        )
+        if self.sharding is not None:
+            packed = jax.device_put(packed, self.sharding)
+        return self._fn_packed(packed)
+
+    @property
+    def measurement_frame(self):
+        from .measure import Frame
+
+        return Frame.from_compiled(self.cc)
 
     # --------------------------------------------------------- introspection
     def lower(self, psi_shape_only: bool = True):

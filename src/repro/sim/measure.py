@@ -1,0 +1,753 @@
+"""Measurement, sampling & observables over (possibly distributed) states.
+
+Every real workload consumes the simulated state through *shots*, *marginals*
+and *Pauli expectations* — never through raw ``2^n`` amplitudes. This module
+computes all three without ever materializing the global probability vector on
+one device:
+
+* **shot sampling** — two-level inverse-CDF: a tiny ``[2^(R+G)]`` vector of
+  per-shard probability masses picks the shard, then the selected shard's
+  ``2^L`` local CDF picks the amplitude. Work per shot is ``O(L)`` after one
+  ``O(2^L)`` pass per *distinct* sampled shard;
+* **marginals** — a single reduction over the non-kept axes (sharded-global
+  for the jnp backends, one streaming pass per host-DRAM shard for offload);
+* **Pauli expectations** — diagonal (Z) terms as fused probability
+  reductions; X/Y terms by applying the basis-change gates ``H`` (X) and
+  ``H·S†`` (Y) through the existing :mod:`repro.sim.apply` machinery before
+  the diagonal reduction.
+
+All backends measure in the **final stage's physical layout** (the executors'
+``run_packed`` paths skip the final inter-stage remap, saving a full
+state-vector permutation): a :class:`Frame` records the physical-bit
+permutation from ``PlannedStage.layout`` plus the pending Häner-Steiger lazy
+flips, and sampled physical indices are mapped back to logical bitstrings by
+bit relabeling — O(shots), not O(2^n).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import gates as G
+from ..core.circuit import Circuit
+from .apply import apply_matrix
+from .result import SimulationResult
+
+# basis-change matrices: V with V† Z V = P  =>  <psi|P|psi> = sum |V psi|^2 * sign
+_BASIS_CHANGE = {
+    "X": G.H,  # H Z H = X
+    "Y": G.H @ G.SDG,  # (H S†)† Z (H S†) = Y
+}
+# X_p P X_p = corr * P — correction when the measured bit carries a lazy flip
+_FLIP_CORRECTION = {"X": 1.0, "Y": -1.0, "Z": -1.0}
+
+
+# ======================================================================
+# Pauli observables
+# ======================================================================
+
+_TERM_RE = re.compile(
+    r"^\s*([+-]?\s*(?:\d+\.?\d*|\.\d+)?)\s*\*?\s*((?:[IXYZixyz]\s*\d+\s*)*)$"
+)
+_OP_RE = re.compile(r"([IXYZixyz])\s*(\d+)")
+
+
+@dataclass(frozen=True)
+class PauliTerm:
+    """``coeff * P_{q0} P_{q1} ...`` with ``ops`` sorted by qubit."""
+
+    coeff: float
+    ops: Tuple[Tuple[int, str], ...]  # ((qubit, 'X'|'Y'|'Z'), ...)
+
+    def __str__(self) -> str:
+        body = " ".join(f"{p}{q}" for q, p in self.ops) or "I"
+        return f"{self.coeff:g}*{body}"
+
+
+@dataclass(frozen=True)
+class PauliSum:
+    """A real-weighted sum of Pauli strings (a Hermitian observable)."""
+
+    terms: Tuple[PauliTerm, ...]
+
+    @staticmethod
+    def parse(text: str) -> "PauliSum":
+        """Parse e.g. ``"Z0 Z1 + 0.5*X2 Y3 - 2.0"``.
+
+        Grammar: terms joined by ``+``/``-``; each term is an optional real
+        coefficient (optionally ``*``-separated) followed by whitespace-
+        separated single-qubit Paulis like ``Z0``, ``X12`` (``I`` ops and a
+        bare coefficient — an identity term — are allowed).
+        """
+        chunks = re.findall(r"[+-]?[^+-]+", text)
+        terms: List[PauliTerm] = []
+        for chunk in chunks:
+            if not chunk.strip():
+                continue
+            m = _TERM_RE.match(chunk)
+            if m is None:
+                raise ValueError(f"cannot parse Pauli term {chunk!r}")
+            coeff_txt = m.group(1).replace(" ", "")
+            if coeff_txt in ("", "+", "-"):
+                coeff = -1.0 if coeff_txt == "-" else 1.0
+            else:
+                coeff = float(coeff_txt)
+            ops: Dict[int, str] = {}
+            for p, q in _OP_RE.findall(m.group(2)):
+                p = p.upper()
+                q = int(q)
+                if p == "I":
+                    continue
+                if q in ops:
+                    raise ValueError(f"duplicate qubit {q} in term {chunk!r}")
+                ops[q] = p
+            terms.append(PauliTerm(coeff, tuple(sorted(ops.items()))))
+        if not terms:
+            raise ValueError(f"empty observable {text!r}")
+        return PauliSum(tuple(terms))
+
+    @staticmethod
+    def coerce(obs: Union[str, "PauliSum", PauliTerm]) -> "PauliSum":
+        if isinstance(obs, PauliSum):
+            return obs
+        if isinstance(obs, PauliTerm):
+            return PauliSum((obs,))
+        return PauliSum.parse(obs)
+
+    def __str__(self) -> str:
+        return " + ".join(str(t) for t in self.terms)
+
+    @property
+    def max_qubit(self) -> int:
+        return max((q for t in self.terms for q, _ in t.ops), default=-1)
+
+
+def expectation_np(psi: np.ndarray, obs: Union[str, PauliSum]) -> float:
+    """complex128 oracle via the pairing identity (no basis change):
+
+    ``<psi|P|psi> = sum_j conj(psi[j ^ x_mask]) * phase(j) * psi[j]`` with
+    ``phase(j) = i^{#Y} * (-1)^{popcount(j & (y_mask | z_mask))}``.
+
+    Deliberately a *different algorithm* from the backend measurers so tests
+    cross-check the two.
+    """
+    obs = PauliSum.coerce(obs)
+    psi = np.asarray(psi, dtype=np.complex128).reshape(-1)
+    n = int(round(np.log2(psi.size)))
+    j = np.arange(psi.size, dtype=np.int64)
+    total = 0.0 + 0.0j
+    for t in obs.terms:
+        x_mask = y_mask = z_mask = 0
+        for q, p in t.ops:
+            if p == "X":
+                x_mask |= 1 << q
+            elif p == "Y":
+                y_mask |= 1 << q
+            else:
+                z_mask |= 1 << q
+        flip = x_mask | y_mask
+        n_y = bin(y_mask).count("1")
+        parity = np.zeros(psi.size, dtype=np.int64)
+        m = j & (y_mask | z_mask)
+        for b in range(n):
+            parity ^= (m >> b) & 1
+        phase = (1j**n_y) * np.where(parity, -1.0, 1.0)
+        total += t.coeff * np.sum(np.conj(psi[j ^ flip]) * phase * psi)
+    return float(total.real)
+
+
+def marginal_np(psi: np.ndarray, qubits: Sequence[int]) -> np.ndarray:
+    """Dense-oracle marginal: index bit ``j`` of the output = ``qubits[j]``."""
+    psi = np.asarray(psi).reshape(-1)
+    n = int(round(np.log2(psi.size)))
+    p2 = (psi.real**2 + psi.imag**2).reshape((2,) * n)
+    keep = list(qubits)
+    drop = tuple(sorted(n - 1 - b for b in range(n) if b not in keep))
+    out = p2.sum(axis=drop)
+    desc = sorted(keep, reverse=True)  # axis i of `out` <-> bit desc[i]
+    perm = [desc.index(b) for b in reversed(keep)]  # want axis i <-> keep[k-1-i]
+    return np.ascontiguousarray(np.transpose(out, perm)).reshape(-1)
+
+
+# ======================================================================
+# Frame: physical <-> logical index mapping
+# ======================================================================
+
+
+@dataclass(frozen=True)
+class Frame:
+    """How physical packed-index bits map to logical qubits.
+
+    Physical bit ``p`` (bit ``p`` of the flat packed index; local bits are
+    ``p < L``) stores logical qubit ``layout[p]``; if ``p`` is in
+    ``flip_bits`` the stored value is the logical value XOR 1 (a pending
+    Häner-Steiger lazy flip that was never materialized).
+    """
+
+    n: int
+    L: int
+    layout: Tuple[int, ...]
+    flip_bits: Tuple[int, ...] = ()
+
+    @staticmethod
+    def identity(n: int, L: Optional[int] = None) -> "Frame":
+        return Frame(n=n, L=n if L is None else L, layout=tuple(range(n)))
+
+    @staticmethod
+    def from_compiled(cc) -> "Frame":
+        """Frame of a CompiledCircuit's *pre-final-remap* state."""
+        layout = tuple(cc.programs[-1].layout)
+        flips = tuple(cc.final_remap.flip_bits) if cc.final_remap is not None else ()
+        return Frame(n=cc.n, L=cc.L, layout=layout, flip_bits=flips)
+
+    @property
+    def n_shards(self) -> int:
+        return 1 << (self.n - self.L)
+
+    @property
+    def phys_of(self) -> Dict[int, int]:
+        return {q: p for p, q in enumerate(self.layout)}
+
+    def phys_to_logical(self, phys: np.ndarray) -> np.ndarray:
+        """Vectorized physical-index -> logical-index bit relabeling."""
+        phys = np.asarray(phys, dtype=np.int64)
+        out = np.zeros_like(phys)
+        flips = set(self.flip_bits)
+        for p in range(self.n):
+            bit = (phys >> p) & 1
+            if p in flips:
+                bit = bit ^ 1
+            out |= bit << self.layout[p]
+        return out
+
+    def logical_to_phys(self, logical: np.ndarray) -> np.ndarray:
+        logical = np.asarray(logical, dtype=np.int64)
+        out = np.zeros_like(logical)
+        flips = set(self.flip_bits)
+        for p in range(self.n):
+            bit = (logical >> self.layout[p]) & 1
+            if p in flips:
+                bit = bit ^ 1
+            out |= bit << p
+        return out
+
+
+# ======================================================================
+# jitted sharded-global reductions (pjit / shard_map backends)
+# ======================================================================
+
+
+@jax.jit
+def _jnp_shard_masses(x2d: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x2d.real**2 + x2d.imag**2, axis=1)
+
+
+@jax.jit
+def _jnp_local_probs(x2d: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    row = jax.lax.dynamic_index_in_dim(x2d, s, axis=0, keepdims=False)
+    return row.real**2 + row.imag**2
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _jnp_marginal(xflat: jnp.ndarray, n: int, keep_bits: Tuple[int, ...]):
+    v = xflat.reshape((2,) * n)
+    p2 = v.real**2 + v.imag**2
+    drop = tuple(sorted(n - 1 - b for b in range(n) if b not in keep_bits))
+    # remaining axes are the kept bits in descending order, so the C-order
+    # flat index has bit j <-> keep_bits[j] (ascending) — exactly our layout.
+    return jnp.sum(p2, axis=drop).reshape(-1)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 4))
+def _jnp_expect(
+    xflat: jnp.ndarray,
+    n: int,
+    xy_bits: Tuple[int, ...],
+    xy_mats: jnp.ndarray,  # [len(xy_bits), 2, 2]
+    sign_bits: Tuple[int, ...],
+):
+    v = xflat.reshape((2,) * n)
+    for i, b in enumerate(xy_bits):
+        v = apply_matrix(v, xy_mats[i], [b])
+    p2 = v.real**2 + v.imag**2
+    for b in sign_bits:
+        a = n - 1 - b
+        sign = jnp.array([1.0, -1.0], dtype=p2.dtype).reshape(
+            (1,) * a + (2,) + (1,) * (n - 1 - a)
+        )
+        p2 = p2 * sign
+    return jnp.sum(p2)
+
+
+# per-shard streaming reducers (offload backend)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _jnp_marginal_local(shard: jnp.ndarray, L: int, keep_bits: Tuple[int, ...]):
+    return _jnp_marginal(shard, L, keep_bits)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 4))
+def _jnp_expect_local(shard, L, xy_bits, xy_mats, sign_bits):
+    return _jnp_expect(shard, L, xy_bits, xy_mats, sign_bits)
+
+
+# ======================================================================
+# Measurers
+# ======================================================================
+
+
+class Measurer:
+    """Backend-agnostic measurement driver.
+
+    Subclasses provide four primitives over the *physical* packed state; the
+    base class composes them into sampling / marginals / expectations in
+    *logical* qubit coordinates, undoing the :class:`Frame` permutation on
+    indices (O(shots)) and small host arrays (O(2^|subset|)) only.
+    """
+
+    def __init__(self, frame: Frame):
+        self.frame = frame
+
+    # -- backend primitives -------------------------------------------------
+    def _shard_masses(self) -> np.ndarray:  # [n_shards] float64
+        raise NotImplementedError
+
+    def _local_probs(self, shard_id: int) -> np.ndarray:  # [2^L] float64
+        raise NotImplementedError
+
+    def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
+        """Marginal over physical bits; output index bit j <-> keep_bits[j]
+        (keep_bits ascending)."""
+        raise NotImplementedError
+
+    def _expect_term_phys(
+        self,
+        sign_bits: Tuple[int, ...],
+        xy: Tuple[Tuple[int, np.ndarray], ...],
+    ) -> float:
+        """sum_i |V psi|^2(i) * prod_{b in sign_bits} (-1)^{bit b of i}, with
+        V the product of 1-qubit basis changes ``xy`` (phys bit, 2x2)."""
+        raise NotImplementedError
+
+    # -- sampling -----------------------------------------------------------
+    def sample(self, shots: int, seed: int = 0) -> np.ndarray:
+        """Sample ``shots`` logical basis-state indices.
+
+        Deterministic for a fixed ``seed``: uniforms are drawn host-side from
+        ``np.random.default_rng(seed)``; shard choice via the shard-mass CDF
+        (``2^(R+G)`` entries), intra-shard choice via that shard's local CDF.
+        Only the *distinct* sampled shards ever ship a ``2^L`` row to host.
+        """
+        L = self.frame.L
+        rng = np.random.default_rng(seed)
+        u = rng.random((shots, 2))
+        masses = np.asarray(self._shard_masses(), dtype=np.float64)
+        cdf = np.cumsum(masses / masses.sum())
+        cdf[-1] = 1.0
+        sid = np.clip(
+            np.searchsorted(cdf, u[:, 0], side="right"), 0, masses.size - 1
+        )
+        phys = np.empty(shots, dtype=np.int64)
+        for s in np.unique(sid):
+            mask = sid == s
+            lp = np.asarray(self._local_probs(int(s)), dtype=np.float64)
+            lcdf = np.cumsum(lp)
+            lcdf /= lcdf[-1]
+            lcdf[-1] = 1.0
+            loc = np.clip(
+                np.searchsorted(lcdf, u[mask, 1], side="right"), 0, lp.size - 1
+            )
+            phys[mask] = (int(s) << L) | loc
+        return self.frame.phys_to_logical(phys)
+
+    # -- marginals ----------------------------------------------------------
+    def marginal(self, qubits: Sequence[int]) -> np.ndarray:
+        """P(qubits) as a ``2^k`` vector; output index bit j = qubits[j]."""
+        qubits = tuple(qubits)
+        n = self.frame.n
+        assert len(set(qubits)) == len(qubits), "duplicate qubits"
+        assert all(0 <= q < n for q in qubits), "qubit out of range"
+        phys_of = self.frame.phys_of
+        phys = [phys_of[q] for q in qubits]
+        keep = tuple(sorted(phys))
+        raw = np.asarray(self._marginal_phys(keep), dtype=np.float64)
+        # raw index bit j <-> keep[j]; remap to requested order + apply flips
+        k = len(qubits)
+        pos_in_keep = {b: j for j, b in enumerate(keep)}
+        flips = set(self.frame.flip_bits)
+        out = np.empty(1 << k, dtype=np.float64)
+        for m in range(1 << k):
+            src = 0
+            for j, q in enumerate(qubits):
+                p = phys[j]
+                bit = ((m >> j) & 1) ^ (1 if p in flips else 0)
+                src |= bit << pos_in_keep[p]
+            out[m] = raw[src]
+        return out
+
+    # -- expectations -------------------------------------------------------
+    def expectation(self, obs: Union[str, PauliSum, PauliTerm]) -> float:
+        obs = PauliSum.coerce(obs)
+        n = self.frame.n
+        assert obs.max_qubit < n, "observable acts on out-of-range qubit"
+        phys_of = self.frame.phys_of
+        flips = set(self.frame.flip_bits)
+        total = 0.0
+        for t in obs.terms:
+            if not t.ops:
+                total += t.coeff
+                continue
+            sign_bits = tuple(sorted(phys_of[q] for q, _ in t.ops))
+            xy: List[Tuple[int, np.ndarray]] = []
+            corr = 1.0
+            for q, p in t.ops:
+                pb = phys_of[q]
+                if p in ("X", "Y"):
+                    xy.append((pb, _BASIS_CHANGE[p]))
+                if pb in flips:
+                    corr *= _FLIP_CORRECTION[p]
+            xy.sort(key=lambda e: e[0])
+            total += t.coeff * corr * self._expect_term_phys(sign_bits, tuple(xy))
+        return float(total)
+
+    def expectations(self, observables) -> Dict[str, float]:
+        if isinstance(observables, (str, PauliSum, PauliTerm)):
+            observables = [observables]
+        return {
+            str(PauliSum.coerce(o)): self.expectation(o) for o in observables
+        }
+
+
+class DenseMeasurer(Measurer):
+    """Single-host numpy measurer (the oracle path; also the 'ref' backend)."""
+
+    def __init__(self, state: np.ndarray, frame: Optional[Frame] = None):
+        state = np.asarray(state).reshape(-1)
+        n = int(round(np.log2(state.size)))
+        super().__init__(frame if frame is not None else Frame.identity(n))
+        assert self.frame.n == n
+        self.state = state
+        self._p2: Optional[np.ndarray] = None  # |psi|^2, computed once
+
+    @classmethod
+    def with_frame(cls, psi_logical: np.ndarray, frame: Frame) -> "DenseMeasurer":
+        """Re-store a *logical-order* dense state in ``frame``'s physical
+        order, so this measurer is bit-for-bit comparable to a distributed
+        backend measuring in that frame (same shard CDFs, same sample
+        stream for a given key)."""
+        psi_logical = np.asarray(psi_logical).reshape(-1)
+        idx = frame.phys_to_logical(np.arange(psi_logical.size, dtype=np.int64))
+        return cls(psi_logical[idx], frame)
+
+    def _probs(self) -> np.ndarray:
+        if self._p2 is None:
+            from .statevector import probabilities
+
+            self._p2 = probabilities(self.state)
+        return self._p2
+
+    def _shard_masses(self) -> np.ndarray:
+        return self._probs().reshape(self.frame.n_shards, -1).sum(axis=1)
+
+    def _local_probs(self, shard_id: int) -> np.ndarray:
+        L = self.frame.L
+        return self._probs()[shard_id << L : (shard_id + 1) << L]
+
+    def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
+        n = self.frame.n
+        p2 = self._probs().reshape((2,) * n)
+        drop = tuple(sorted(n - 1 - b for b in range(n) if b not in keep_bits))
+        return p2.sum(axis=drop).reshape(-1)
+
+    def _expect_term_phys(self, sign_bits, xy) -> float:
+        n = self.frame.n
+        v = self.state.astype(np.complex128).reshape((2,) * n)
+        for b, mat in xy:
+            ax = n - 1 - b
+            v = np.moveaxis(np.tensordot(mat, v, axes=([1], [ax])), 0, ax)
+        p2 = v.real**2 + v.imag**2
+        for b in sign_bits:
+            a = n - 1 - b
+            p2 = p2 * np.array([1.0, -1.0]).reshape((1,) * a + (2,) + (1,) * (n - 1 - a))
+        return float(p2.sum())
+
+
+class ShardedMeasurer(Measurer):
+    """Measurer over a global jnp array (pjit packed ``[2^G,2^R,2^L]`` or
+    shard_map flat ``[2^n]``). Reductions run under jit with the input's
+    sharding preserved, so only ``O(2^(R+G))`` masses, one ``2^L`` row per
+    distinct sampled shard, and ``O(2^|subset|)`` marginals ever reach the
+    host."""
+
+    def __init__(self, state: jnp.ndarray, frame: Frame):
+        super().__init__(frame)
+        self.xflat = state.reshape(-1)
+        self.x2d = state.reshape(frame.n_shards, 1 << frame.L)
+        self.dtype = state.dtype
+
+    def _shard_masses(self) -> np.ndarray:
+        return np.asarray(_jnp_shard_masses(self.x2d), dtype=np.float64)
+
+    def _local_probs(self, shard_id: int) -> np.ndarray:
+        return np.asarray(
+            _jnp_local_probs(self.x2d, jnp.int32(shard_id)), dtype=np.float64
+        )
+
+    def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
+        return np.asarray(
+            _jnp_marginal(self.xflat, self.frame.n, keep_bits), dtype=np.float64
+        )
+
+    def _expect_term_phys(self, sign_bits, xy) -> float:
+        bits = tuple(b for b, _ in xy)
+        if xy:
+            mats = jnp.asarray(np.stack([m for _, m in xy]).astype(np.dtype(self.dtype)))
+        else:
+            mats = jnp.zeros((0, 2, 2), dtype=self.dtype)
+        return float(
+            _jnp_expect(self.xflat, self.frame.n, bits, mats, sign_bits)
+        )
+
+
+class StreamingMeasurer(Measurer):
+    """Measurer over a host-DRAM state (offload backend).
+
+    Every reduction makes exactly **one pass** over the ``2^(R+G)`` host
+    shards, streaming each through the accelerator — the same property that
+    makes staged offloading beat per-gate offloading: measurement traffic is
+    one read of the state, independent of how many qubits are measured.
+
+    X/Y basis changes on *non-local* physical bits couple groups of ``2^m``
+    shards (m = number of non-local X/Y bits in the term); those groups are
+    rotated host-side with the Kronecker-built ``2^m x 2^m`` unitary before
+    the per-shard device reduction, still touching each shard once.
+    """
+
+    MAX_GROUP_BITS = 8  # 2^m * 2^L working-set cap for non-local X/Y terms
+
+    def __init__(self, state: np.ndarray, frame: Frame):
+        super().__init__(frame)
+        self.state = np.asarray(state).reshape(-1)
+        assert self.state.size == 1 << frame.n
+
+    def _shards(self):
+        L = self.frame.L
+        for s in range(self.frame.n_shards):
+            yield s, self.state[s << L : (s + 1) << L]
+
+    def _shard_masses(self) -> np.ndarray:
+        out = np.empty(self.frame.n_shards, dtype=np.float64)
+        for s, shard in self._shards():
+            out[s] = float(
+                _jnp_shard_masses(jnp.asarray(shard).reshape(1, -1))[0]
+            )
+        return out
+
+    def _local_probs(self, shard_id: int) -> np.ndarray:
+        L = self.frame.L
+        shard = self.state[shard_id << L : (shard_id + 1) << L]
+        return (shard.real**2 + shard.imag**2).astype(np.float64)
+
+    def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
+        L = self.frame.L
+        loc = tuple(b for b in keep_bits if b < L)
+        nl = [b for b in keep_bits if b >= L]
+        pos = {b: j for j, b in enumerate(keep_bits)}
+        # local pattern -> offset within the output index
+        spread = np.zeros(1 << len(loc), dtype=np.int64)
+        for ll in range(1 << len(loc)):
+            v = 0
+            for jl, b in enumerate(loc):
+                if (ll >> jl) & 1:
+                    v |= 1 << pos[b]
+            spread[ll] = v
+        out = np.zeros(1 << len(keep_bits), dtype=np.float64)
+        for s, shard in self._shards():
+            part = np.asarray(
+                _jnp_marginal_local(jnp.asarray(shard), L, loc), dtype=np.float64
+            )
+            base = 0
+            for b in nl:
+                if (s >> (b - L)) & 1:
+                    base |= 1 << pos[b]
+            out[base + spread] += part
+        return out
+
+    def _expect_term_phys(self, sign_bits, xy) -> float:
+        L, n = self.frame.L, self.frame.n
+        xy_loc = tuple((b, m) for b, m in xy if b < L)
+        xy_nl = [(b, m) for b, m in xy if b >= L]
+        m = len(xy_nl)
+        assert m <= self.MAX_GROUP_BITS, (
+            f"{m} non-local X/Y bits exceeds the 2^{self.MAX_GROUP_BITS} "
+            "shard-group working-set cap; re-plan with these qubits local"
+        )
+        loc_bits = tuple(b for b, _ in xy_loc)
+        if xy_loc:
+            mats = jnp.asarray(
+                np.stack([mm for _, mm in xy_loc]).astype(self.state.dtype)
+            )
+        else:
+            mats = jnp.zeros((0, 2, 2), dtype=self.state.dtype)
+        sign_loc = tuple(b for b in sign_bits if b < L)
+        sign_nl = [b for b in sign_bits if b >= L]
+        # group rotation: index bit t <-> xy_nl[t]; kron builds low bits last
+        U = np.array([[1.0]], dtype=np.complex128)
+        for _, mat in reversed(xy_nl):
+            U = np.kron(U, mat)
+        nl_mask = 0
+        for b, _ in xy_nl:
+            nl_mask |= 1 << (b - L)
+        total = 0.0
+        for base in range(self.frame.n_shards):
+            if base & nl_mask:
+                continue  # shard handled inside its group
+            group_ids = []
+            for g in range(1 << m):
+                sidx = base
+                for t, (b, _) in enumerate(xy_nl):
+                    if (g >> t) & 1:
+                        sidx |= 1 << (b - L)
+                group_ids.append(sidx)
+            stack = np.stack(
+                [self.state[i << L : (i + 1) << L] for i in group_ids]
+            )
+            rotated = (U @ stack).astype(self.state.dtype) if m else stack
+            for g, sidx in enumerate(group_ids):
+                sgn = 1.0
+                for b in sign_nl:
+                    if (sidx >> (b - L)) & 1:
+                        sgn = -sgn
+                val = _jnp_expect_local(
+                    jnp.asarray(rotated[g]), L, loc_bits, mats, sign_loc
+                )
+                total += sgn * float(val)
+        return total
+
+
+# ======================================================================
+# Entry point
+# ======================================================================
+
+_BACKENDS = ("ref", "pjit", "shardmap", "offload")
+
+
+def measurer_for(backend_state, frame: Frame) -> Measurer:
+    """Pick the right measurer for a backend's packed state."""
+    if isinstance(backend_state, np.ndarray):
+        return StreamingMeasurer(backend_state, frame)
+    return ShardedMeasurer(backend_state, frame)
+
+
+def measure_to_result(
+    measurer: Measurer,
+    *,
+    backend: str,
+    shots: int = 0,
+    seed: int = 0,
+    marginals: Sequence[Sequence[int]] = (),
+    observables: Union[str, PauliSum, Sequence] = (),
+) -> SimulationResult:
+    """Run the requested measurements on ``measurer`` and package them.
+
+    The single result-filling path shared by :func:`simulate_and_measure`,
+    :func:`repro.sim.statevector.measure` and the launch driver."""
+    result = SimulationResult(
+        n_qubits=measurer.frame.n, backend=backend, shots=shots, seed=seed
+    )
+    if shots:
+        result.samples = measurer.sample(shots, seed=seed)
+    if marginals and isinstance(marginals[0], (int, np.integer)):
+        marginals = [marginals]  # single subset passed bare
+    for qs in marginals:
+        result.marginals[tuple(qs)] = measurer.marginal(qs)
+    if isinstance(observables, (str, PauliSum, PauliTerm)):
+        observables = [observables]
+    for obs in observables:
+        ps = PauliSum.coerce(obs)
+        result.expectations[str(ps)] = measurer.expectation(ps)
+    return result
+
+
+def simulate_and_measure(
+    circuit: Circuit,
+    *,
+    backend: str = "ref",
+    L: Optional[int] = None,
+    R: int = 0,
+    G: int = 0,
+    plan=None,
+    shots: int = 0,
+    seed: int = 0,
+    marginals: Sequence[Sequence[int]] = (),
+    observables: Union[str, PauliSum, Sequence] = (),
+    dtype=jnp.complex64,
+    mesh=None,
+    use_pallas: bool = False,
+    psi0=None,
+    **plan_kw,
+) -> SimulationResult:
+    """Simulate ``circuit`` on the chosen backend and consume the state
+    through measurement only — the full amplitude vector is never gathered
+    to one host (except on the dense 'ref' backend, which *is* one host).
+
+    Backends: ``'ref'`` (dense single-device), ``'pjit'`` (GSPMD staged
+    executor), ``'shardmap'`` (explicit-collective executor), ``'offload'``
+    (host-DRAM streaming executor). The three planned backends measure in the
+    final stage's layout — the final inter-stage remap is skipped entirely.
+    """
+    import time
+
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
+    n = circuit.n_qubits
+    t0 = time.time()
+    meta: Dict[str, float] = {}
+    if backend == "ref":
+        from .statevector import simulate
+
+        psi = np.asarray(simulate(circuit, psi0=psi0, dtype=dtype))
+        measurer: Measurer = DenseMeasurer(psi)
+    else:
+        if plan is None:
+            from ..core.partition import partition
+
+            Lq = L if L is not None else n - R - G
+            plan = partition(circuit, Lq, R, G, **plan_kw)
+        if backend == "pjit":
+            from .executor import StagedExecutor
+
+            ex = StagedExecutor(circuit, plan, mesh=mesh, dtype=dtype)
+            state = ex.run_packed(psi0)
+            measurer = ShardedMeasurer(state, ex.measurement_frame)
+        elif backend == "shardmap":
+            from .shardmap_executor import ShardMapExecutor
+
+            ex = ShardMapExecutor(circuit, plan, dtype=dtype, use_pallas=use_pallas)
+            state = ex.run_packed(psi0)
+            measurer = ShardedMeasurer(state, ex.measurement_frame)
+        else:  # offload
+            from .offload import OffloadedExecutor
+
+            ex = OffloadedExecutor(circuit, plan, dtype=np.dtype(dtype))
+            state = ex.run(psi0, apply_final_remap=False)
+            measurer = StreamingMeasurer(state, ex.measurement_frame)
+        meta["n_stages"] = plan.n_stages
+    meta["simulate_s"] = time.time() - t0
+
+    t0 = time.time()
+    result = measure_to_result(
+        measurer, backend=backend, shots=shots, seed=seed,
+        marginals=marginals, observables=observables,
+    )
+    meta["measure_s"] = time.time() - t0
+    result.meta = meta
+    return result

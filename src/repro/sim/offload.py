@@ -83,7 +83,16 @@ class OffloadedExecutor:
             idx |= bit << j
         return op.tensor[idx]
 
-    def run(self, psi0: Optional[np.ndarray] = None) -> np.ndarray:
+    def run(
+        self, psi0: Optional[np.ndarray] = None, apply_final_remap: bool = True
+    ) -> np.ndarray:
+        """Stream every stage over the host-resident shards.
+
+        With ``apply_final_remap=False`` the closing host-side bit
+        permutation is skipped: the returned state stays in the last stage's
+        physical layout (see :attr:`measurement_frame`), which is what
+        :mod:`repro.sim.measure`'s streaming measurer consumes — measurement
+        then costs one read pass instead of a full permute + read."""
         n, L = self.n, self.L
         state = np.zeros(2**n, dtype=self.dtype)
         if psi0 is None:
@@ -106,10 +115,16 @@ class OffloadedExecutor:
             if prog.remap_after is not None:
                 state = _np_remap(state, prog.remap_after, n)
                 self.stats["host_remaps"] += 1
-        if self.cc.final_remap is not None:
+        if apply_final_remap and self.cc.final_remap is not None:
             state = _np_remap(state, self.cc.final_remap, n)
             self.stats["host_remaps"] += 1
         return state
+
+    @property
+    def measurement_frame(self):
+        from .measure import Frame
+
+        return Frame.from_compiled(self.cc)
 
 
 class PerGateOffloadExecutor:

@@ -27,6 +27,7 @@ emits the paper's communication choreography explicitly:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -195,14 +196,19 @@ class ShardMapExecutor:
             else None
         )
 
+        self._fn = self._make_fn(apply_final=True)
+        self._fn_packed = None  # built lazily on first run_packed()
+
+    def _make_fn(self, apply_final: bool):
+        nb = self.R + self.G
         fn = shard_map(
-            self._device_fn,
+            partial(self._device_fn, apply_final=apply_final),
             mesh=self.mesh,
             in_specs=P(self.axis_names if nb else None),
             out_specs=P(self.axis_names if nb else None),
             check_rep=False,
         )
-        self._fn = jax.jit(fn, donate_argnums=(0,))
+        return jax.jit(fn, donate_argnums=(0,))
 
     # ----------------------------------------------------------------- ops
     def _dep_idx(self, op: Op):
@@ -249,7 +255,7 @@ class ShardMapExecutor:
             x = jnp.flip(x, axis=ax)
         return jnp.transpose(x, rp.post_perm)
 
-    def _device_fn(self, shard):
+    def _device_fn(self, shard, apply_final: bool = True):
         L = self.L
         view = shard.reshape((2,) * L)
         if self.initial_plan is not None:
@@ -259,7 +265,7 @@ class ShardMapExecutor:
                 view = self._apply_op(view, op)
             if rp is not None:
                 view = self._apply_remap(view, rp)
-        if self.final_plan is not None:
+        if apply_final and self.final_plan is not None:
             view = self._apply_remap(view, self.final_plan)
         return view.reshape(-1)
 
@@ -270,6 +276,25 @@ class ShardMapExecutor:
             psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
         psi0 = jax.device_put(jnp.asarray(psi0, dtype=self.dtype), self.sharding)
         return self._fn(psi0)
+
+    def run_packed(self, psi0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Run but skip the final remap choreography entirely (no closing
+        all-to-all/ppermute): returns the flat ``[2^n]`` state in the last
+        stage's physical layout, sharded over the bit-mesh. Pair with
+        :attr:`measurement_frame` + :mod:`repro.sim.measure`."""
+        if self._fn_packed is None:
+            self._fn_packed = self._make_fn(apply_final=False)
+        n = self.n
+        if psi0 is None:
+            psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
+        psi0 = jax.device_put(jnp.asarray(psi0, dtype=self.dtype), self.sharding)
+        return self._fn_packed(psi0)
+
+    @property
+    def measurement_frame(self):
+        from .measure import Frame
+
+        return Frame.from_compiled(self.cc)
 
     def lower(self):
         shape = jax.ShapeDtypeStruct((1 << self.n,), self.dtype, sharding=self.sharding)

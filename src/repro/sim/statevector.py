@@ -57,3 +57,22 @@ def fidelity(a: jnp.ndarray, b: jnp.ndarray) -> float:
     a = np.asarray(a).reshape(-1)
     b = np.asarray(b).reshape(-1)
     return float(abs(np.vdot(a, b)))
+
+
+def probabilities(psi) -> np.ndarray:
+    """|psi|^2 as float64 (host-side; dense oracle only — never call this on
+    a distributed state, use :mod:`repro.sim.measure` instead)."""
+    psi = np.asarray(psi).reshape(-1)
+    return (psi.real.astype(np.float64) ** 2 + psi.imag.astype(np.float64) ** 2)
+
+
+def measure(psi, shots: int = 0, seed: int = 0, marginals=(), observables=()):
+    """Measure a dense (logical-order) state: the single-device entry into
+    the measurement subsystem. Returns a
+    :class:`repro.sim.result.SimulationResult`."""
+    from .measure import DenseMeasurer, measure_to_result
+
+    return measure_to_result(
+        DenseMeasurer(np.asarray(psi)), backend="dense", shots=shots,
+        seed=seed, marginals=marginals, observables=observables,
+    )

@@ -1,0 +1,102 @@
+"""Guarded stand-in for the ``hypothesis`` API.
+
+The tier-1 suite must run on a clean environment where ``hypothesis`` isn't
+installed (the seed repo crashed at *collection* on ``import hypothesis``).
+Rather than ``pytest.importorskip``-ing whole modules (which would also skip
+their many non-property tests), test modules import ``given``/``settings``/
+``st`` from here when hypothesis is absent: property tests then run a fixed,
+deterministic example sweep (seeded ``np.random.default_rng(0)``) instead of
+hypothesis's adaptive search. With hypothesis installed, the real library is
+used and this file is inert.
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+Only the slice of the API these tests use is provided: ``st.integers``,
+``st.floats``, keyword-style ``@given(...)`` and ``@settings(max_examples=,
+deadline=)``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def draw(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value: float, max_value: float, **kw):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def draw(self, rng):
+        return float(self.lo + (self.hi - self.lo) * rng.random())
+
+
+class _St:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **kw) -> _Floats:
+        return _Floats(min_value, max_value, **kw)
+
+
+st = _St()
+
+
+class settings:  # noqa: N801 - mirrors the hypothesis name
+    """Decorator capturing ``max_examples``; other options are ignored."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._compat_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategies):
+    """Keyword-argument ``@given``: runs the test once per drawn example."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_compat_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                draw = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **draw, **kwargs)
+
+        # pytest must not see the strategy kwargs as fixtures: hide the
+        # wrapped signature and expose only the non-strategy parameters
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.hypothesis_compat_fallback = True
+        return wrapper
+
+    return deco

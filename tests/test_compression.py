@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: deterministic fallback sweep
+    from _hypothesis_compat import given, settings, st
 
 from repro.train.compression import (
     ErrorFeedback,

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: deterministic fallback sweep
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import generators as gen
 from repro.core.cost_model import FUSION, SHM, CostModel, DEFAULT_COST_MODEL
