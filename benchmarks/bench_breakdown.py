@@ -1,6 +1,12 @@
 """Fig. 6 analogue: communication/computation breakdown of distributed
 simulation, derived from the compiled HLO roofline terms (v5e constants) at
-increasing device counts (subprocess per mesh size)."""
+increasing device counts (subprocess per mesh size).
+
+Also reports the compiled pass structure: ``passes_per_stage`` is the mean
+number of HBM read+write passes a stage costs (top-level ops after peephole
+fusion; an shm group of g gates is ONE pass), vs ``gates_per_stage`` — the
+per-gate cost a fusion-free executor would pay. The gap is the win from
+compile-time op-stream fusion + the VMEM shm kernel."""
 
 from __future__ import annotations
 
@@ -27,7 +33,17 @@ ex = ShardMapExecutor(c, plan)
 hlo = ex.lower().compile().as_text()
 hw = ha.HardwareSpec()
 rl = ha.roofline_from_hlo(hlo, 1 << (R + G), peak=hw.fp32_flops)
-print(json.dumps({"stages": plan.n_stages, **rl.as_dict()}))
+from repro.core.cost_model import stage_pass_us
+cc = ex.cc
+n_stages = max(len(cc.programs), 1)
+print(json.dumps({
+    "stages": plan.n_stages,
+    "passes_per_stage": cc.total_passes / n_stages,
+    "gates_per_stage": cc.total_gates / n_stages,
+    "shm_groups": sum(p.n_shm_groups for p in cc.programs),
+    "t_pass_model_s": sum(stage_pass_us(p.n_passes, L) for p in cc.programs) / 1e6,
+    **rl.as_dict(),
+}))
 """
 
 
@@ -49,7 +65,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     fam, L = args.family, args.L
     print("# comm/comp breakdown (roofline terms, v5e constants)")
-    print("family,n,devices,stages,t_compute_s,t_memory_s,t_collective_s,comm_frac")
+    print("family,n,devices,stages,passes_per_stage,gates_per_stage,shm_groups,"
+          "t_pass_model_s,t_compute_s,t_memory_s,t_collective_s,comm_frac")
+    rows = []
     for extra, (R, G) in [(1, (1, 0)), (2, (2, 0)), (3, (2, 1))]:
         n = L + extra
         res = run_cell(fam, n, L, R, G)
@@ -58,8 +76,12 @@ def main(argv=None):
             continue
         tc, tm, tl = res["t_compute_s"], res["t_memory_s"], res["t_collective_s"]
         frac = tl / (tl + max(tc, tm))
-        print(f"{fam},{n},{1 << extra},{res['stages']},{tc:.4g},{tm:.4g},"
-              f"{tl:.4g},{frac:.3f}")
+        print(f"{fam},{n},{1 << extra},{res['stages']},"
+              f"{res['passes_per_stage']:.2f},{res['gates_per_stage']:.2f},"
+              f"{res['shm_groups']},{res['t_pass_model_s']:.4g},"
+              f"{tc:.4g},{tm:.4g},{tl:.4g},{frac:.3f}")
+        rows.append({"family": fam, "n": n, "devices": 1 << extra, **res})
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,7 +1,13 @@
 """Fig. 7 / Fig. 8 analogue: DRAM-offloaded simulation vs per-gate offloading
 (the QDAO comparison). Reports wall time and host<->device shard transfers —
 the transfer count is the paper's mechanism: staged offloading moves each
-shard once per STAGE; per-gate offloading once per GATE."""
+shard once per STAGE; per-gate offloading once per GATE.
+
+Also reports the streaming-pipeline health of the staged path:
+``overlap`` — fraction of shard dispatches issued while the previous shard
+was still in flight (double-buffering; best case 1 - stages/transfers), and
+``uploads`` — full-tensor host->device uploads (once per op; per-shard slices
+are device-side gathers, so uploads must NOT scale with the shard count)."""
 
 from __future__ import annotations
 
@@ -9,6 +15,7 @@ import argparse
 import time
 from typing import Dict, List
 
+from repro.core.cost_model import offload_pass_us
 from repro.core.generators import FAMILIES
 from repro.core.partition import partition
 from repro.sim.offload import OffloadedExecutor, PerGateOffloadExecutor
@@ -32,6 +39,13 @@ def run(fam: str = "qft", ns=(14, 15, 16, 17), L: int = 12) -> List[Dict]:
             "atlas_time_s": t_atlas, "pergate_time_s": t_pg,
             "atlas_transfers": ex.stats["shard_transfers"],
             "pergate_transfers": pg.stats["shard_transfers"],
+            "atlas_overlap": ex.overlap_ratio,
+            "atlas_uploads": ex.stats["tensor_uploads"],
+            "atlas_slice_reuse": ex.stats["tensor_slice_reuse"],
+            "atlas_passes": ex.stats["memory_passes"],
+            # modeled host-link floor for the staged path (v5e-class link)
+            "modeled_link_s": ex.stats["shard_transfers"]
+            * offload_pass_us(L) / 1e6,
         })
     return rows
 
@@ -45,13 +59,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
     rows = run(args.family, range(args.min_n, args.max_n + 1), args.L)
     print("family,n,L,stages,atlas_time_s,pergate_time_s,speedup,"
-          "atlas_transfers,pergate_transfers,transfer_ratio")
+          "atlas_transfers,pergate_transfers,transfer_ratio,"
+          "atlas_overlap,atlas_uploads,atlas_passes")
     for r in rows:
         print(f"{r['family']},{r['n']},{r['L']},{r['stages']},"
               f"{r['atlas_time_s']:.3f},{r['pergate_time_s']:.3f},"
               f"{r['pergate_time_s'] / r['atlas_time_s']:.2f},"
               f"{r['atlas_transfers']},{r['pergate_transfers']},"
-              f"{r['pergate_transfers'] / r['atlas_transfers']:.1f}")
+              f"{r['pergate_transfers'] / r['atlas_transfers']:.1f},"
+              f"{r['atlas_overlap']:.3f},{r['atlas_uploads']},"
+              f"{r['atlas_passes']}")
     return rows
 
 

@@ -17,6 +17,7 @@ Harness -> paper artifact map:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -27,6 +28,11 @@ def main() -> None:
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
              "sim_dryrun",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write the summary as JSON (CI uploads this artifact so "
+             "the perf trajectory accumulates across commits)",
     )
     args = ap.parse_args()
     skip = set(args.skip.split(",")) if args.skip else set()
@@ -80,17 +86,24 @@ def main() -> None:
         rows = bench_offload.main([])
         dt = time.time() - t0
         ratio = rows[-1]["pergate_transfers"] / rows[-1]["atlas_transfers"]
+        overlap = rows[-1]["atlas_overlap"]
         summary.append(("bench_offload", 1e6 * dt / max(len(rows), 1),
-                        f"transfer_reduction={ratio:.1f}x"))
+                        f"transfer_reduction={ratio:.1f}x overlap={overlap:.2f}"))
 
     if "breakdown" not in skip:
         section("bench_breakdown (Fig. 6: comm/comp fractions)")
         from . import bench_breakdown
 
         t0 = time.time()
-        bench_breakdown.main([])
+        rows = bench_breakdown.main([])
         dt = time.time() - t0
-        summary.append(("bench_breakdown", 1e6 * dt / 3, "roofline-derived"))
+        if rows:
+            fusion = sum(r["gates_per_stage"] for r in rows) / max(
+                sum(r["passes_per_stage"] for r in rows), 1e-9)
+            derived = f"gates_per_pass={fusion:.1f}"
+        else:
+            derived = "roofline-derived"
+        summary.append(("bench_breakdown", 1e6 * dt / 3, derived))
 
     if "sampling" not in skip:
         section("bench_sampling (measurement: shots/marginals/expectations)")
@@ -116,6 +129,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in summary:
         print(f"{name},{us:.0f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"rows": [{"name": n, "us_per_call": us, "derived": d}
+                          for n, us, d in summary]},
+                f, indent=2,
+            )
+        print(f"(summary JSON written to {args.json})")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,27 @@ IO_QUBITS = 3  # lowest physical qubits forced into every shm kernel
 FUSION = 0
 SHM = 1
 
+# host<->device link for the DRAM-offload path (PCIe Gen4 x16-class; the
+# paper's §VII-C regime). One *offload pass* moves a shard down and back.
+HOST_LINK_GBPS = 32.0
+AMP_BYTES = 8  # complex64
+
+
+def offload_pass_us(L: int) -> float:
+    """Modeled host-link time for one read+write pass over a 2^L-amplitude
+    shard. With double-buffered streaming the link and the device overlap, so
+    a stage's lower bound is max(link, HBM) rather than their sum — this is
+    what bench_offload's overlap ratio measures progress against."""
+    return 2 * AMP_BYTES * (1 << L) / (HOST_LINK_GBPS * 1e3)
+
+
+def stage_pass_us(n_passes: int, L: int = 28) -> float:
+    """HBM cost of a stage that executes in ``n_passes`` memory passes (the
+    compiled pass model: one per top-level op; an shm group of g gates is ONE
+    pass — the alpha + sum_g cost(g) regime)."""
+    frac = (1 << L) / (1 << 28)
+    return n_passes * PASS_US * frac
+
 
 def fusion_cost(k: int) -> float:
     """Cost of a k-qubit fusion kernel (us per 2^28-amp shard)."""

@@ -17,6 +17,22 @@ from .shm import shm_apply
 
 INTERPRET = jax.default_backend() != "tpu"
 
+# Trace-time pallas_call emission counters: each wrapper bumps its counter
+# once per call site traced, so after `jit`-tracing an executor the counts
+# equal the number of kernel launches (= HBM read+write passes) in the
+# compiled program. Tests use this to prove an shm group of g gates costs
+# exactly ONE kernel launch.
+KERNEL_CALLS = {"fused": 0, "shm": 0}
+
+
+def reset_kernel_counters() -> None:
+    for k in KERNEL_CALLS:
+        KERNEL_CALLS[k] = 0
+
+
+def kernel_call_counts() -> dict:
+    return dict(KERNEL_CALLS)
+
 
 def _to_planar(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
@@ -39,6 +55,7 @@ def apply_fused_shard(
     """Apply fused unitary ``u`` [K, K] (complex) to a local shard view
     ((2,)*L complex array) on index bits ``local_bits`` via the Pallas MXU
     kernel. Transposes the target bits to the lowest positions first."""
+    KERNEL_CALLS["fused"] += 1
     L = view.ndim
     k = len(local_bits)
     lb = list(local_bits)
@@ -62,8 +79,10 @@ def apply_shm_shard(
     gates: Sequence[Tuple[Tuple[int, ...], np.ndarray]],
     window_bits: int,
 ) -> jnp.ndarray:
-    """Apply a shared-memory kernel (static gate list on the lowest
-    ``window_bits`` bits) to a local shard view."""
+    """Apply a shared-memory kernel (gate list on the lowest ``window_bits``
+    bits; bits are window-relative) to a local shard view — one
+    ``pallas_call`` for the whole group."""
+    KERNEL_CALLS["shm"] += 1
     L = view.ndim
     a = window_bits
     x = view.reshape(1 << (L - a), 1 << a)
@@ -71,3 +90,33 @@ def apply_shm_shard(
     bm = _choose_block_m(x.shape[0], x.shape[1], target_bytes=1 << 19)
     ore, oim = shm_apply(sre, sim, gates, a, block_m=bm, interpret=INTERPRET)
     return (ore + 1j * oim).astype(view.dtype).reshape((2,) * L)
+
+
+def apply_shm_group(
+    view: jnp.ndarray,
+    gates: Sequence[Tuple[Tuple[int, ...], jnp.ndarray]],
+    window: Sequence[int],
+) -> jnp.ndarray:
+    """Apply an shm group whose member gates act on arbitrary shard index
+    bits. ``window`` is the group's active bit set (ascending shard
+    positions); member gate ``bits`` are shard positions inside ``window``.
+
+    Transposes the window bits to the lowest positions, runs ONE shm
+    ``pallas_call`` over the whole group, and transposes back — the group
+    costs one HBM read+write pass regardless of its gate count.
+    """
+    L = view.ndim
+    w = list(window)
+    a = len(w)
+    pos_in_window = {b: i for i, b in enumerate(w)}
+    rel_gates = [
+        (tuple(pos_in_window[b] for b in bits), mat) for bits, mat in gates
+    ]
+    if w == list(range(a)):
+        return apply_shm_shard(view, rel_gates, a)
+    # transpose-in/out wrapper: window bits -> lowest a index bits
+    rest = [b for b in range(L - 1, -1, -1) if b not in pos_in_window]
+    perm = [L - 1 - b for b in rest] + [L - 1 - b for b in reversed(w)]
+    x = jnp.transpose(view, perm)
+    out = apply_shm_shard(x, rel_gates, a)
+    return jnp.transpose(out, list(np.argsort(perm)))

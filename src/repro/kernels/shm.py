@@ -12,14 +12,16 @@ The paper's "3 least-significant qubits in every shm kernel" I/O-coalescing
 rule maps to requiring the lowest ``IO_QUBITS`` bits inside the window so each
 VMEM transfer moves whole (8, 128) fp32 tiles.
 
-Gates are closed over as static (bits, matrix) pairs: the per-gate update is
-expressed with reshape + slice + broadcast arithmetic, which lowers to VPU
-selects/FMAs on TPU (and runs exactly in interpret mode on CPU).
+Gate *structure* (bits, dimensions) is static; gate *matrices* are kernel
+operands (small planar-fp32 arrays, VMEM-resident across the whole grid).
+This keeps one compiled kernel per gate-structure signature while letting the
+executors feed dep-batched matrix variants selected at trace time from
+``lax.axis_index`` — the distributed shm path needs per-device matrices, so
+matrices cannot be baked into the kernel body as constants.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import List, Sequence, Tuple
 
 import jax
@@ -28,9 +30,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 
-def _apply_gate_in_block(xre, xim, bits: Tuple[int, ...], mat: np.ndarray, a: int):
+def _apply_gate_in_block(xre, xim, bits: Tuple[int, ...], elems, a: int):
     """Apply one gate to a (BM, 2^a) planar block. bits: window bit positions
-    (bit j of the gate index binds to bits[j])."""
+    (bit j of the gate index binds to bits[j]). ``elems[r][c]`` is the matrix
+    entry as an ``(re, im)`` pair — python floats for static matrices or
+    traced scalars for operand matrices — with ``None`` for known zeros."""
     bm = xre.shape[0]
     k = len(bits)
     dim = 1 << k
@@ -55,9 +59,9 @@ def _apply_gate_in_block(xre, xim, bits: Tuple[int, ...], mat: np.ndarray, a: in
         acc_re = None
         acc_im = None
         for c in range(dim):
-            mre, mim = float(np.real(mat[r, c])), float(np.imag(mat[r, c]))
-            if mre == 0.0 and mim == 0.0:
+            if elems[r][c] is None:
                 continue
+            mre, mim = elems[r][c]
             t_re = mre * subs_re[c] - mim * subs_im[c]
             t_im = mre * subs_im[c] + mim * subs_re[c]
             acc_re = t_re if acc_re is None else acc_re + t_re
@@ -68,24 +72,10 @@ def _apply_gate_in_block(xre, xim, bits: Tuple[int, ...], mat: np.ndarray, a: in
         out_re.append(acc_re)
         out_im.append(acc_im)
 
-    # scatter back: rebuild along gate axes by stacking
-    def rebuild(outs):
-        # outs[r] has the gate axes removed; stack bit by bit (low bit last)
-        cur = outs
-        for j in range(k):  # rebuild gate bit j as a new axis
-            nxt = []
-            for h in range(len(cur) // 2):
-                lo, hi = cur[2 * h], cur[2 * h + 1]
-                # wait: bit 0 varies fastest => pair (even, odd) differ in bit 0
-                nxt.append(jnp.stack([lo, hi], axis=0))
-            cur = nxt
-        return cur[0]  # axes: (bit_{k-1}, ..., bit_0) + remaining
-
-    # Simpler scatter: stack all and transpose into place
+    # scatter back: stack along the gate axes and move them into place
     stacked_re = jnp.stack(out_re, axis=0).reshape((2,) * k + (bm,) + _removed_shape(a, axes))
     stacked_im = jnp.stack(out_im, axis=0).reshape((2,) * k + (bm,) + _removed_shape(a, axes))
-    # stacked axes: (bit_{k-1}..bit_0)? stack axis0 over r (r bit order: r =
-    # sum_j bit_j<<j, C-order reshape => leading axes are high bits first)
+    # stack axis 0 runs over r (C-order reshape => leading axes are high bits)
     xre_new = _scatter_axes(stacked_re, axes, a, bm)
     xim_new = _scatter_axes(stacked_im, axes, a, bm)
     return xre_new.reshape(bm, 1 << a), xim_new.reshape(bm, 1 << a)
@@ -99,29 +89,42 @@ def _scatter_axes(stacked, axes, a, bm):
     """stacked: (2,)*k (gate bits high->low) + (BM,) + remaining window axes.
     Move the gate-bit axes back to their window positions."""
     k = len(axes)
-    # current axis of gate bit j: (k-1-j); target axis in full view: axes[j]
-    # build permutation for output (BM,)+(2,)*a
-    src = list(range(k))  # stacked gate axes (bit k-1 .. bit 0)
     dst = [axes[k - 1 - i] for i in range(k)]
-    # full current layout: gate axes + (BM,) + remaining
-    # normalize: move BM to front first
     stacked = jnp.moveaxis(stacked, k, 0)  # (BM,) + gate axes + remaining
     src = [1 + i for i in range(k)]
-    out = jnp.moveaxis(stacked, src, dst)
-    return out
+    return jnp.moveaxis(stacked, src, dst)
 
 
-def make_shm_kernel(
-    gates: Sequence[Tuple[Tuple[int, ...], np.ndarray]], window_bits: int
-):
-    """Returns a Pallas kernel body applying the static gate list."""
+def _operand_elems(mre, mim) -> List[List[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Element table for an operand matrix loaded from a kernel ref (traced
+    scalars — no zero structure known at trace time)."""
+    dim = mre.shape[0]
+    return [[(mre[r, c], mim[r, c]) for c in range(dim)] for r in range(dim)]
+
+
+def make_shm_kernel(gate_specs: Sequence[Tuple[str, Tuple[int, ...]]], window_bits: int):
+    """Kernel body applying a static gate-structure list; the per-gate planar
+    operands arrive as refs (2 per gate, re/im).
+
+    ``gate_specs``: ('mat', bits) — unitary matrix on the window bits (operand
+    [2^kg, 2^kg]); ('diag', ()) — diagonal already expanded over the full
+    window (operand [1, 2^a]), applied as ONE complex elementwise multiply.
+    """
     a = window_bits
+    n_g = len(gate_specs)
 
-    def body(sre_ref, sim_ref, ore_ref, oim_ref):
+    def body(sre_ref, sim_ref, *refs):
+        op_refs, (ore_ref, oim_ref) = refs[: 2 * n_g], refs[2 * n_g:]
         xre = sre_ref[...]
         xim = sim_ref[...]
-        for bits, mat in gates:
-            xre, xim = _apply_gate_in_block(xre, xim, tuple(bits), np.asarray(mat), a)
+        for gi, (kind, bits) in enumerate(gate_specs):
+            pre = op_refs[2 * gi][...]
+            pim = op_refs[2 * gi + 1][...]
+            if kind == "diag":
+                xre, xim = xre * pre - xim * pim, xre * pim + xim * pre
+            else:
+                elems = _operand_elems(pre, pim)
+                xre, xim = _apply_gate_in_block(xre, xim, tuple(bits), elems, a)
         ore_ref[...] = xre
         oim_ref[...] = xim
 
@@ -131,19 +134,41 @@ def make_shm_kernel(
 def shm_apply(
     sre: jnp.ndarray,
     sim: jnp.ndarray,
-    gates: Sequence[Tuple[Tuple[int, ...], np.ndarray]],
+    gates: Sequence[Tuple[Tuple[int, ...], jnp.ndarray]],
     window_bits: int,
     *,
     block_m: int = 8,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """sre/sim: [M, 2^a] fp32 planar state (a = window_bits)."""
+    """sre/sim: [M, 2^a] fp32 planar state (a = window_bits).
+
+    ``gates``: (bits, op) pairs; a 2-D ``op`` is a unitary matrix on ``bits``
+    (static numpy or traced dep-batched variant), a 1-D ``op`` is a diagonal
+    indexed by the values of ``bits`` — expanded here to a full-window vector
+    so the kernel applies it as one VPU elementwise multiply. All gates
+    execute inside ONE ``pallas_call`` — one HBM read+write pass.
+    """
     m, A = sre.shape
     assert A == 1 << window_bits
     bm = min(block_m, m)
     assert m % bm == 0
-    body = make_shm_kernel(gates, window_bits)
+    gate_specs: List[Tuple[str, Tuple[int, ...]]] = []
+    mats: List[jnp.ndarray] = []
+    for bits, op in gates:
+        cm = jnp.asarray(op)
+        if cm.ndim == 1:  # diagonal: expand over the window with index math
+            idx = np.zeros(A, dtype=np.int64)
+            for j, b in enumerate(bits):
+                idx |= ((np.arange(A) >> b) & 1) << j
+            cm = cm[idx].reshape(1, A)
+            gate_specs.append(("diag", ()))
+        else:
+            gate_specs.append(("mat", tuple(bits)))
+        mats.append(jnp.real(cm).astype(jnp.float32))
+        mats.append(jnp.imag(cm).astype(jnp.float32))
+    body = make_shm_kernel(gate_specs, window_bits)
     spec = pl.BlockSpec((bm, A), lambda i: (i, 0))
+    mat_specs = [pl.BlockSpec(mm.shape, lambda i: (0, 0)) for mm in mats]
     out_shape = [
         jax.ShapeDtypeStruct((m, A), jnp.float32),
         jax.ShapeDtypeStruct((m, A), jnp.float32),
@@ -152,9 +177,9 @@ def shm_apply(
         pl.pallas_call(
             body,
             grid=(m // bm,),
-            in_specs=[spec, spec],
+            in_specs=[spec, spec] + mat_specs,
             out_specs=[spec, spec],
             out_shape=out_shape,
             interpret=interpret,
-        )(sre, sim)
+        )(sre, sim, *mats)
     )

@@ -50,35 +50,40 @@ def apply_diag(psi_view: jnp.ndarray, diag: jnp.ndarray, bits: Sequence[int]) ->
     return psi_view * w
 
 
+def scatter_bits(values: np.ndarray, positions: Sequence[int]) -> np.ndarray:
+    """Vectorized bit scatter: deposit bit ``j`` of each value at position
+    ``positions[j]`` of the result (numpy index arithmetic, no Python loop
+    over values)."""
+    out = np.zeros_like(np.asarray(values, dtype=np.int64))
+    for j, p in enumerate(positions):
+        out |= ((values >> j) & 1) << p
+    return out
+
+
+def gather_bits(values: np.ndarray, positions: Sequence[int]) -> np.ndarray:
+    """Vectorized bit gather: bit ``j`` of the result is bit ``positions[j]``
+    of each value (inverse of :func:`scatter_bits`)."""
+    out = np.zeros_like(np.asarray(values, dtype=np.int64))
+    for j, p in enumerate(positions):
+        out |= ((values >> p) & 1) << j
+    return out
+
+
 def embed_matrix(mat: np.ndarray, positions: Sequence[int], k: int) -> np.ndarray:
     """Embed a matrix over ``len(positions)`` bits into a ``2^k``-bit space.
 
     ``positions[j]`` is the target bit (within the k-bit space) for matrix
-    index bit ``j``. Pure numpy (host-side kernel building).
+    index bit ``j``. Pure numpy index arithmetic (host-side kernel building).
     """
     kk = len(positions)
     dim, DIM = 2**kk, 2**k
-    out = np.zeros((DIM, DIM), dtype=np.complex128)
     rest = [b for b in range(k) if b not in positions]
-    for base_bits in range(2 ** len(rest)):
-        base = 0
-        for j, b in enumerate(rest):
-            if (base_bits >> j) & 1:
-                base |= 1 << b
-        for r in range(dim):
-            ri = base
-            for j in range(kk):
-                if (r >> j) & 1:
-                    ri |= 1 << positions[j]
-            for c in range(dim):
-                v = mat[r, c]
-                if abs(v) < 1e-16:
-                    continue
-                ci = base
-                for j in range(kk):
-                    if (c >> j) & 1:
-                        ci |= 1 << positions[j]
-                out[ri, ci] = v
+    base = scatter_bits(np.arange(1 << len(rest)), rest)  # identity sub-space
+    sub = scatter_bits(np.arange(dim), positions)  # embedded matrix indices
+    rows = base[:, None, None] | sub[None, :, None]
+    cols = base[:, None, None] | sub[None, None, :]
+    out = np.zeros((DIM, DIM), dtype=np.complex128)
+    out[rows, cols] = np.asarray(mat, dtype=np.complex128)[None, :, :]
     return out
 
 
@@ -113,15 +118,8 @@ def specialize_gate(
     local_bits = [j for j in range(k) if j not in nonlocal_bits]
     dim = 2 ** len(local_bits)
     out = np.zeros((dim, dim), dtype=np.complex128)
-
-    def compress(idx: int) -> int:
-        r = 0
-        for jj, b in enumerate(local_bits):
-            if (idx >> b) & 1:
-                r |= 1 << jj
-        return r
-
-    for r, c, kp in zip(rows, cols, keep):
-        if kp:
-            out[compress(r), compress(c)] = mat[r, c]
+    r_kept, c_kept = rows[keep], cols[keep]
+    out[gather_bits(r_kept, local_bits), gather_bits(c_kept, local_bits)] = mat[
+        r_kept, c_kept
+    ]
     return out, tuple(flipped)

@@ -27,7 +27,7 @@ import numpy as np
 from ..core.circuit import Circuit, Gate
 from ..core.cost_model import FUSION, SHM
 from ..core.partition import SimulationPlan
-from .apply import embed_matrix, specialize_gate
+from .apply import embed_matrix, gather_bits, specialize_gate
 
 INSULAR_KIND = 2  # kernel.kind for zero-footprint bookkeeping kernels
 
@@ -37,8 +37,10 @@ class Op:
     """One data-parallel operation on the sharded state.
 
     kind: 'fused' (tensor [2^d, 2^k, 2^k]), 'diag' (tensor [2^d, 2^k]),
-    'scalar' (tensor [2^d]).
-    ``local_bits``: physical local bit positions (ascending), len k.
+    'scalar' (tensor [2^d]), 'shm' (a whole shared-memory kernel: ``gates``
+    holds the member ops, applied in order inside ONE memory pass).
+    ``local_bits``: physical local bit positions (ascending), len k; for
+    'shm' this is the kernel's VMEM window (union of member local bits).
     ``dep_bits``: physical non-local bit positions (ascending), len d.
     """
 
@@ -48,6 +50,11 @@ class Op:
     tensor: np.ndarray
     gate_ids: Tuple[int, ...] = ()
     shm_group: int = -1  # >=0: index of the VMEM(SHM) kernel this op belongs to
+    gates: Tuple["Op", ...] = ()  # 'shm' only: member ops in application order
+
+    @property
+    def n_gates(self) -> int:
+        return len(self.gate_ids)
 
 
 @dataclass
@@ -74,6 +81,16 @@ class StageProgram:
     remap_after: Optional[RemapSpec]  # None for last stage (see final_remap)
     n_shm_groups: int = 0
 
+    @property
+    def n_passes(self) -> int:
+        """HBM read+write passes this stage costs: one per top-level op (an
+        'shm' op is ONE pass regardless of its gate count)."""
+        return len(self.ops)
+
+    @property
+    def n_gates(self) -> int:
+        return sum(op.n_gates for op in self.ops)
+
 
 @dataclass
 class CompiledCircuit:
@@ -85,6 +102,14 @@ class CompiledCircuit:
     initial_remap: Optional[RemapSpec]  # identity layout -> stage-0 layout
     final_remap: Optional[RemapSpec]  # last layout (+pending flips) -> identity
     dtype: np.dtype = np.complex64
+
+    @property
+    def total_passes(self) -> int:
+        return sum(p.n_passes for p in self.programs)
+
+    @property
+    def total_gates(self) -> int:
+        return sum(p.n_gates for p in self.programs)
 
 
 MAX_DEP_ENTRIES = 1 << 24  # cap on 2^d * 4^k tensor entries per op
@@ -100,7 +125,8 @@ def _remap_spec(
 
 
 def compile_plan(
-    circuit: Circuit, plan: SimulationPlan, dtype=np.complex64
+    circuit: Circuit, plan: SimulationPlan, dtype=np.complex64,
+    peephole: bool = True,
 ) -> CompiledCircuit:
     n, L = plan.n_qubits, plan.L
     programs: List[StageProgram] = []
@@ -137,18 +163,32 @@ def compile_plan(
                                      flip_before, dtype)
                 ops.extend(built)
             elif kern.kind == SHM:
-                grp = shm_groups
-                shm_groups += 1
+                members: List[Op] = []
                 for gid in gids:
-                    for op in _build_fused(circuit, [gid], None, phys_of, L,
-                                           flip_before, dtype):
-                        op.shm_group = grp
-                        ops.append(op)
+                    members.extend(_build_fused(circuit, [gid], None, phys_of, L,
+                                                flip_before, dtype))
+                if peephole:
+                    members = _peephole(members, dtype)
+                if len(members) <= 1 or all(m.kind == "scalar" for m in members):
+                    ops.extend(members)  # degenerate group: no kernel needed
+                else:
+                    grp = shm_groups
+                    shm_groups += 1
+                    window = sorted({b for m in members for b in m.local_bits})
+                    dep = sorted({p for m in members for p in m.dep_bits})
+                    all_gids = tuple(sorted(g for m in members for g in m.gate_ids))
+                    ops.append(Op(
+                        "shm", tuple(window), tuple(dep),
+                        np.zeros((0,), dtype=dtype), all_gids,
+                        shm_group=grp, gates=tuple(members),
+                    ))
             else:  # INSULAR_KIND: zero-footprint gates -> scalars (flips done)
                 for gid in gids:
                     op = _build_scalar(circuit, gid, phys_of, L, flip_before, dtype)
                     if op is not None:
                         ops.append(op)
+        if peephole:
+            ops = _peephole(ops, dtype)
 
         # --- remap to next stage --------------------------------------------
         if si + 1 < len(plan.stages):
@@ -223,24 +263,34 @@ def _build_fused(
         return out
     dep_pos = {p: i for i, p in enumerate(dep)}
 
-    T = np.zeros((1 << d, 1 << k, 1 << k), dtype=np.complex128)
-    ident = np.eye(1 << k, dtype=np.complex128)
-    for combo in range(1 << d):
-        U = ident
-        for g, gid in zip(gates, gids):
-            loc, nl = _gate_bit_split(g, phys_of, L)
-            fb = flip_before[gid]
-            values = [
-                ((combo >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0) for j, p in nl
-            ]
-            m_loc, _ = specialize_gate(g.matrix, [j for j, _ in nl], values)
-            if not loc:
-                # scalar contribution folded into U
-                U = m_loc[0, 0] * U
-                continue
-            positions = [pos_in_kernel[p] for _, p in loc]
-            U = embed_matrix(m_loc, positions, k) @ U
-        T[combo] = U
+    # Batched build over all dep combos: each gate is specialized once per
+    # combination of ITS OWN non-local bits (2^d_g variants, not 2^d), the
+    # variants are gathered per-combo with index arithmetic, and the product
+    # over gates is one batched matmul per gate.
+    combos = np.arange(1 << d)
+    T = np.broadcast_to(np.eye(1 << k, dtype=np.complex128),
+                        (1 << d, 1 << k, 1 << k)).copy()
+    scal = np.ones(1 << d, dtype=np.complex128)
+    for g, gid in zip(gates, gids):
+        loc, nl = _gate_bit_split(g, phys_of, L)
+        fb = flip_before[gid]
+        # per-combo variant index over this gate's own non-local bits
+        vg = np.zeros(1 << d, dtype=np.int64)
+        for jj, (j, p) in enumerate(nl):
+            bit = ((combos >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0)
+            vg |= bit << jj
+        nl_idx = [j for j, _ in nl]
+        variants = [
+            specialize_gate(g.matrix, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))])[0]
+            for v in range(1 << len(nl))
+        ]
+        if not loc:
+            scal *= np.array([m[0, 0] for m in variants])[vg]
+            continue
+        positions = [pos_in_kernel[p] for _, p in loc]
+        E = np.stack([embed_matrix(m, positions, k) for m in variants])
+        T = np.matmul(E[vg], T)
+    T *= scal[:, None, None]
     # diagonal detection
     off = T - np.einsum("dij,ij->dij", T, np.eye(1 << k))
     if np.abs(off).max() < 1e-12:
@@ -259,13 +309,98 @@ def _build_scalar(
     dep = sorted(p for _, p in nl)
     dep_pos = {p: i for i, p in enumerate(dep)}
     fb = flip_before[gid]
-    vec = np.zeros((1 << len(dep),), dtype=np.complex128)
-    for combo in range(1 << len(dep)):
-        values = [
-            ((combo >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0) for j, p in nl
-        ]
-        m, _ = specialize_gate(g.matrix, [j for j, _ in nl], values)
-        vec[combo] = m[0, 0]
+    nl_idx = [j for j, _ in nl]
+    variants = np.array([
+        specialize_gate(g.matrix, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))])[0][0, 0]
+        for v in range(1 << len(nl))
+    ])
+    combos = np.arange(1 << len(dep))
+    vg = np.zeros(1 << len(dep), dtype=np.int64)
+    for jj, (j, p) in enumerate(nl):
+        vg |= (((combos >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0)) << jj
+    vec = variants[vg]
     if np.allclose(vec, 1.0):
         return None  # identity (e.g. pure control selection with U=I)
     return Op("scalar", (), tuple(dep), vec.astype(dtype), (gid,))
+
+
+# ---------------------------------------------------------------------------
+# Peephole op-stream fusion: every top-level op costs one HBM read+write pass
+# over the shard, so folding adjacent scalar/diag ops into their neighbors is
+# a direct pass-count reduction (Fatima & Markov-style fusion, applied to the
+# compiled op stream instead of the gate stream).
+# ---------------------------------------------------------------------------
+
+
+def _dep_expand(op: Op, dep_union: Sequence[int]) -> np.ndarray:
+    """Re-index ``op.tensor`` from its own dep combos to the union combos."""
+    pos = {p: i for i, p in enumerate(dep_union)}
+    # union combo -> op's own combo: gather the op's dep bits
+    idx = gather_bits(np.arange(1 << len(dep_union)),
+                      [pos[p] for p in op.dep_bits])
+    return op.tensor.astype(np.complex128)[idx]
+
+
+def _diag_vals(op: Op, dep_union: Sequence[int], local_union: Sequence[int]) -> np.ndarray:
+    """Diagonal weights of a scalar/diag op, expanded to the union dep combos
+    and broadcast over the union local index space: [2^du, 2^ku]."""
+    e = _dep_expand(op, dep_union)  # [2^du] or [2^du, 2^k_own]
+    if op.kind == "scalar":
+        return e[:, None]
+    pos = {p: i for i, p in enumerate(local_union)}
+    lidx = gather_bits(np.arange(1 << len(local_union)),
+                       [pos[p] for p in op.local_bits])
+    return e[:, lidx]
+
+
+def _try_merge(a: Op, b: Op, dtype) -> Optional[Op]:
+    """Merge two adjacent ops (``a`` applied first) into one, or None."""
+    if a.kind in ("shm", "fused") and b.kind in ("shm", "fused"):
+        return None
+    if a.kind == "shm" or b.kind == "shm":
+        return None
+    dep_union = sorted(set(a.dep_bits) | set(b.dep_bits))
+    gids = tuple(sorted(a.gate_ids + b.gate_ids))
+
+    if a.kind != "fused" and b.kind != "fused":
+        # scalar/diag x scalar/diag -> diag (or scalar if no local bits)
+        local_union = sorted(set(a.local_bits) | set(b.local_bits))
+        if (1 << len(dep_union)) * (1 << len(local_union)) > MAX_DEP_ENTRIES:
+            return None
+        vals = (_diag_vals(a, dep_union, local_union)
+                * _diag_vals(b, dep_union, local_union))
+        if not local_union:
+            return Op("scalar", (), tuple(dep_union),
+                      vals[:, 0].astype(dtype), gids)
+        return Op("diag", tuple(local_union), tuple(dep_union),
+                  vals.astype(dtype), gids)
+
+    # one side is fused: fold the diagonal side in when its bits are covered
+    fused, other, other_first = (b, a, True) if b.kind == "fused" else (a, b, False)
+    if other.kind == "diag" and not set(other.local_bits) <= set(fused.local_bits):
+        return None
+    k = len(fused.local_bits)
+    if (1 << len(dep_union)) * (1 << (2 * k)) > MAX_DEP_ENTRIES:
+        return None
+    T = _dep_expand(fused, dep_union)  # [2^du, K, K]
+    dv = _diag_vals(other, dep_union, fused.local_bits)  # [2^du, K] or [2^du, 1]
+    # diagonal-first scales the columns (T @ D); diagonal-last the rows (D @ T)
+    T = T * dv[:, None, :] if other_first else T * dv[:, :, None]
+    return Op("fused", fused.local_bits, tuple(dep_union), T.astype(dtype), gids)
+
+
+def _peephole(ops: List[Op], dtype) -> List[Op]:
+    """Left-to-right fold of adjacent ops (merging preserves application
+    order, so it is always sound — diagonal factors compose by elementwise
+    multiply, and folding into a fused tensor multiplies on the matching
+    side)."""
+    out: List[Op] = []
+    for op in ops:
+        while out:
+            merged = _try_merge(out[-1], op, dtype)
+            if merged is None:
+                break
+            out.pop()
+            op = merged
+        out.append(op)
+    return out

@@ -43,10 +43,20 @@ def _dep_index(op: Op, G: int, R: int, L: int) -> Optional[jnp.ndarray]:
     return idx
 
 
-def apply_op(x: jnp.ndarray, op: Op, G: int, R: int, L: int, dtype) -> jnp.ndarray:
+def apply_op(
+    x: jnp.ndarray, op: Op, G: int, R: int, L: int, dtype, consts=None
+) -> jnp.ndarray:
     """x: [2^G, 2^R] + (2,)*L."""
+    if op.kind == "shm":
+        # non-Pallas fallback: members apply sequentially (same semantics,
+        # one einsum per member; GSPMD is free to fuse)
+        for m in op.gates:
+            x = apply_op(x, m, G, R, L, dtype, consts)
+        return x
     k = len(op.local_bits)
-    T = jnp.asarray(op.tensor, dtype=dtype)
+    T = None if consts is None else consts.get(id(op))
+    if T is None:
+        T = jnp.asarray(op.tensor, dtype=dtype)
     idx = _dep_index(op, G, R, L)
 
     if op.kind == "scalar":
@@ -139,6 +149,13 @@ class StagedExecutor:
             )
         else:
             self.sharding = None
+        # hoist op tensors into per-executor device constants (shared traces)
+        self._consts = {}
+        for prog in self.cc.programs:
+            for op in prog.ops:
+                for o in (op,) + op.gates:
+                    if o.tensor.size:
+                        self._consts[id(o)] = jnp.asarray(o.tensor, dtype=dtype)
         donate = (0,) if donate else ()
         self._fn = jax.jit(lambda x: self._run(x, True), donate_argnums=donate)
         self._fn_packed = jax.jit(lambda x: self._run(x, False), donate_argnums=donate)
@@ -151,11 +168,51 @@ class StagedExecutor:
 
     def _apply_local_ops(self, x, prog: StageProgram):
         n, G, R, L = self.n, self.G, self.R, self.L
-        # (the Pallas kernels plug into the per-device ShardMapExecutor path;
-        # the pjit path keeps XLA einsums so GSPMD stays free to fuse)
+        # (plain fused/diag/scalar ops stay XLA einsums so GSPMD is free to
+        # fuse; with use_pallas an shm group runs as ONE pallas_call per
+        # shard, vmapped over the packed shard axes)
         for op in prog.ops:
-            x = apply_op(x, op, G, R, L, self.dtype)
+            if self.use_pallas and op.kind == "shm":
+                x = self._apply_shm_pallas(x, op)
+            else:
+                x = apply_op(x, op, G, R, L, self.dtype, self._consts)
         return x
+
+    def _apply_shm_pallas(self, x, op: Op):
+        G, R, L = self.G, self.R, self.L
+        S = 1 << (G + R)
+        xf = x.reshape((S,) + (2,) * L)
+        bits_list = []
+        mats = []
+        scal = None  # [S] product of standalone scalar members
+        for m in op.gates:
+            T = self._consts.get(id(m))
+            if T is None:
+                T = jnp.asarray(m.tensor, dtype=self.dtype)
+            idx = _dep_index(m, G, R, L)
+            if idx is not None and T.shape[0] > 1:
+                Tsel = T[idx.reshape(-1)]  # [S, ...] per-shard variant
+            else:
+                Tsel = jnp.broadcast_to(T[0], (S,) + T.shape[1:])
+            if m.kind == "scalar":
+                scal = Tsel if scal is None else scal * Tsel
+            else:
+                # 1-D rows = diagonal member, 2-D rows = unitary member
+                bits_list.append(m.local_bits)
+                mats.append(Tsel)
+        if scal is not None:
+            if not mats:
+                return (xf * scal.reshape((S,) + (1,) * L)).reshape(x.shape)
+            extra = (1,) * (mats[0].ndim - 1)
+            mats[0] = mats[0] * scal.reshape((S,) + extra)
+        from ..kernels import ops as kops
+
+        out = jax.vmap(
+            lambda v, *ms: kops.apply_shm_group(
+                v, list(zip(bits_list, ms)), op.local_bits
+            )
+        )(xf, *mats)
+        return out.reshape(x.shape)
 
     def _run(self, psi_packed: jnp.ndarray, apply_final: bool = True) -> jnp.ndarray:
         n, G, R, L = self.n, self.G, self.R, self.L

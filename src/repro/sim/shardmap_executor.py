@@ -137,19 +137,6 @@ def _build_remap_plan(spec: RemapSpec, n: int, L: int) -> RemapPlan:
     )
 
 
-def make_bit_mesh(n_device_bits: int, devices=None) -> Mesh:
-    """Mesh with one axis per device bit, highest bit first (b{n-1}..b{L}).
-
-    Device order matches the production (pod, data, model) row-major order, so
-    the highest bits land on the pod (DCN) axis.
-    """
-    if devices is None:
-        devices = jax.devices()
-    devs = np.array(devices[: 1 << n_device_bits]).reshape((2,) * n_device_bits)
-    # names assigned by caller via axis index; here generic local names
-    return devs
-
-
 class ShardMapExecutor:
     """Explicit-collective staged executor."""
 
@@ -196,6 +183,15 @@ class ShardMapExecutor:
             else None
         )
 
+        # hoist op tensors out of the traced body: one device constant per
+        # tensor, shared by every trace (run / run_packed / lower)
+        self._consts = {}
+        for prog in self.cc.programs:
+            for op in prog.ops:
+                for o in (op,) + op.gates:
+                    if o.tensor.size:
+                        self._consts[id(o)] = jnp.asarray(o.tensor, dtype=self.dtype)
+
         self._fn = self._make_fn(apply_final=True)
         self._fn_packed = None  # built lazily on first run_packed()
 
@@ -217,17 +213,23 @@ class ShardMapExecutor:
             idx = idx + (lax.axis_index(f"b{p}").astype(jnp.int32) << j)
         return idx
 
+    def _select(self, op: Op):
+        """Per-device tensor slice: dep-batched variant via ``lax.axis_index``."""
+        T = self._consts.get(id(op))
+        if T is None:
+            T = jnp.asarray(op.tensor, dtype=self.dtype)
+        if op.dep_bits and T.shape[0] > 1:
+            return T[self._dep_idx(op)]
+        return T[0]
+
     def _apply_op(self, view, op: Op):
         L = self.L
-        T = jnp.asarray(op.tensor, dtype=self.dtype)
-        if op.dep_bits:
-            Tsel = T[self._dep_idx(op)] if T.shape[0] > 1 else T[0]
-        else:
-            Tsel = T[0]
+        if op.kind == "shm":
+            return self._apply_shm(view, op)
+        Tsel = self._select(op)
         if op.kind == "scalar":
             return view * Tsel
         if op.kind == "diag":
-            k = len(op.local_bits)
             shape = [2 if p in op.local_bits else 1 for p in range(L - 1, -1, -1)]
             return view * Tsel.reshape(shape)
         from .apply import apply_matrix
@@ -237,6 +239,34 @@ class ShardMapExecutor:
 
             return kops.apply_fused_shard(view, Tsel, op.local_bits)
         return apply_matrix(view, Tsel, list(op.local_bits))
+
+    def _apply_shm(self, view, op: Op):
+        """One shm group = one memory pass. On the Pallas path the whole
+        member list runs inside a single ``pallas_call``; member matrices are
+        the dep-selected variants, standalone scalar members fold into the
+        first matrix so they never cost an extra pass."""
+        if not self.use_pallas:
+            for m in op.gates:
+                view = self._apply_op(view, m)
+            return view
+        from ..kernels import ops as kops
+
+        gate_list = []
+        scalar_factor = None
+        for m in op.gates:
+            Tsel = self._select(m)
+            if m.kind == "scalar":
+                scalar_factor = Tsel if scalar_factor is None else scalar_factor * Tsel
+            else:
+                # 1-D Tsel = diagonal member, 2-D = unitary member; the kernel
+                # applies diagonals as one VPU elementwise multiply
+                gate_list.append((m.local_bits, Tsel))
+        if scalar_factor is not None:
+            if not gate_list:
+                return view * scalar_factor
+            bits0, mat0 = gate_list[0]
+            gate_list[0] = (bits0, mat0 * scalar_factor)
+        return kops.apply_shm_group(view, gate_list, op.local_bits)
 
     def _apply_remap(self, view, rp: RemapPlan):
         L, m = self.L, rp.m
