@@ -1,0 +1,108 @@
+"""Unified-engine benchmark: the compile cache under serving-style traffic,
+plus the fused batched path vs sequential runs.
+
+The serving scenario the ROADMAP targets is *compile once, run many*: heavy
+repeated traffic re-submits the same circuit. The first request pays ILP
+staging + DP kernelization + stage compilation + XLA compilation; every
+subsequent identical request must hit the :class:`repro.sim.engine`
+CompileCache and pay execution only. This harness measures that ratio
+(``cache_speedup``, acceptance bar: >= 5x) and the batched-states win
+(``batch_speedup``: one fused ``run_batch`` vs B sequential ``run`` calls).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import generators as gen
+from repro.sim.engine import CompileCache, engine_for
+
+
+def _serve(circuit, L, R, backend, cache):
+    """One serving request: resolve the engine (cache-aware) and run it."""
+    eng = engine_for(circuit, L, R, 0, backend=backend, cache=cache)
+    out = eng.run()
+    if not isinstance(out, np.ndarray):
+        out.block_until_ready()
+    return eng
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--L", type=int, default=9)
+    ap.add_argument("--R", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="warm (cache-hit) requests per circuit; best is kept")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--backend", default="pjit",
+                    choices=["pjit", "shardmap", "offload", "dense"])
+    ap.add_argument("--families", default="qft,ising")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("family,cold_s,warm_s,cache_speedup,batch,batch_s,seq_s,batch_speedup")
+    for fam in args.families.split(","):
+        c = gen.FAMILIES[fam](args.n)
+        cache = CompileCache(maxsize=8)
+
+        t0 = time.time()
+        _serve(c, args.L, args.R, args.backend, cache)
+        cold_s = time.time() - t0
+
+        warm_s = float("inf")
+        for _ in range(args.repeats):
+            t0 = time.time()
+            eng = _serve(c, args.L, args.R, args.backend, cache)
+            warm_s = min(warm_s, time.time() - t0)
+        assert cache.misses == 1 and cache.hits == args.repeats, (
+            "identical circuit must hit the compile cache")
+
+        B = args.batch
+        psi0s = np.zeros((B, 2 ** args.n), dtype=np.complex64)
+        psi0s[np.arange(B), np.arange(B)] = 1.0
+        t0 = time.time()
+        out = eng.run_batch(psi0s)
+        if not isinstance(out, np.ndarray):
+            out.block_until_ready()
+        # first batch call pays the vmapped-trace compile; time the steady state
+        t0 = time.time()
+        out = eng.run_batch(psi0s)
+        if not isinstance(out, np.ndarray):
+            out.block_until_ready()
+        batch_s = time.time() - t0
+        t0 = time.time()
+        for b in range(B):
+            o = eng.run(psi0s[b])
+            if not isinstance(o, np.ndarray):
+                o.block_until_ready()
+        seq_s = time.time() - t0
+
+        row = {
+            "family": fam,
+            "cold_s": cold_s,
+            "warm_s": warm_s,
+            "cache_speedup": cold_s / max(warm_s, 1e-9),
+            "batch": B,
+            "batch_s": batch_s,
+            "seq_s": seq_s,
+            "batch_speedup": seq_s / max(batch_s, 1e-9),
+        }
+        rows.append(row)
+        print(f"{fam},{cold_s:.3f},{warm_s:.3f},{row['cache_speedup']:.1f},"
+              f"{B},{batch_s:.3f},{seq_s:.3f},{row['batch_speedup']:.2f}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"(JSON written to {args.json})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Harness -> paper artifact map:
   bench_offload    -> Fig. 7 / Fig. 8 (DRAM offloading vs QDAO-style)
   bench_breakdown  -> Fig. 6 (comm/comp breakdown)
   bench_sampling   -> measurement subsystem (shots/marginals/expectations)
+  bench_engine     -> unified engine: compile cache + batched states (serving)
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -27,7 +28,7 @@ def main() -> None:
     ap.add_argument(
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "sim_dryrun",
+             "engine,sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -115,6 +116,19 @@ def main() -> None:
         worst = max(r["sample_s"] for r in rows)
         summary.append(("bench_sampling", 1e6 * dt / max(len(rows), 1),
                         f"worst_sample_s={worst:.3f}"))
+
+    if "engine" not in skip:
+        section("bench_engine (compile cache + batched states: serving)")
+        from . import bench_engine
+
+        t0 = time.time()
+        rows = bench_engine.main([])
+        dt = time.time() - t0
+        cache_sp = min(r["cache_speedup"] for r in rows)
+        batch_sp = max(r["batch_speedup"] for r in rows)
+        summary.append(("bench_engine", 1e6 * dt / max(len(rows), 1),
+                        f"cache_speedup={cache_sp:.1f}x "
+                        f"batch_speedup={batch_sp:.2f}x"))
 
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")

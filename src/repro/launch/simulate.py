@@ -11,6 +11,10 @@ backend gathers the 2^n probability vector to one device):
   PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 20 \
       --L 17 --R 3 --executor offload --shots 1024 \
       --marginal 0,1,2 --observable "Z0 Z1 + 0.5*X2"
+
+Unified engine (serving path: compile cache + batched initial states):
+  PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 18 \
+      --L 15 --R 3 --executor offload --engine --batch 4 --shots 256
 """
 
 from __future__ import annotations
@@ -26,6 +30,15 @@ from ..core.partition import partition
 from ..sim.statevector import fidelity, simulate
 
 
+def _pjit_mesh(R: int, G: int):
+    """Build the (pod, data, model) mesh when enough devices exist."""
+    if R + G > 0 and len(jax.devices()) >= (1 << (R + G)):
+        rd = 1 << (R // 2)
+        rm = 1 << (R - R // 2)
+        return jax.make_mesh((1 << G, rd, rm), ("pod", "data", "model"))
+    return None
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--circuit", default="qft", choices=sorted(FAMILIES))
@@ -34,10 +47,16 @@ def main(argv=None):
     ap.add_argument("--R", type=int, default=0)
     ap.add_argument("--G", type=int, default=0)
     ap.add_argument("--executor", default="pjit",
-                    choices=["pjit", "shardmap", "offload", "pergate"])
+                    choices=["pjit", "shardmap", "offload", "dense", "pergate"])
     ap.add_argument("--staging", default="ilp", choices=["ilp", "greedy"])
     ap.add_argument("--kernelizer", default="dp", choices=["dp", "ordered", "greedy"])
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--engine", action="store_true",
+                    help="route through the unified ExecutionEngine + compile "
+                         "cache (repro.sim.engine.engine_for)")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="run a batch of B basis initial states through the "
+                         "engine's fused batch path (implies --engine)")
     ap.add_argument("--check", action="store_true", help="fidelity vs dense ref")
     ap.add_argument("--shots", type=int, default=0, help="sample N bitstrings")
     ap.add_argument("--seed", type=int, default=0, help="sampling PRNG seed")
@@ -52,41 +71,93 @@ def main(argv=None):
     circ = FAMILIES[args.circuit](n)
     print(f"{args.circuit}(n={n}): {circ.n_gates} gates; L/R/G = {L}/{args.R}/{args.G}")
 
-    t0 = time.time()
-    plan = partition(circ, L, args.R, args.G,
-                     staging_method=args.staging, kernelize_method=args.kernelizer)
+    measuring = bool(args.shots or args.marginal or args.observable)
+    marginals = [tuple(int(q) for q in spec.split(",")) for spec in args.marginal]
+    use_engine = args.engine or args.batch > 1 or args.executor == "dense"
+    if use_engine and args.executor == "pergate":
+        ap.error("--engine/--batch do not support the pergate baseline")
+
+    if use_engine:
+        from ..sim.engine import DEFAULT_CACHE, engine_for
+
+        backend_kw = {"mesh": _pjit_mesh(args.R, args.G)} \
+            if args.executor == "pjit" else {}
+        t0 = time.time()
+        ex = engine_for(
+            circ, L, args.R, args.G, backend=args.executor,
+            use_pallas=args.pallas, staging_method=args.staging,
+            kernelize_method=args.kernelizer, backend_kw=backend_kw,
+        )
+        plan = ex.plan
+        print(f"engine[{ex.backend.name}] ready in {time.time() - t0:.2f}s; "
+              f"cache: {len(DEFAULT_CACHE)} entries, {DEFAULT_CACHE.hits} hits"
+              f"/{DEFAULT_CACHE.misses} misses")
+    else:
+        t0 = time.time()
+        plan = partition(circ, L, args.R, args.G,
+                         staging_method=args.staging,
+                         kernelize_method=args.kernelizer)
     print(f"partition: {plan.n_stages} stages, kernel cost {plan.total_kernel_cost:,.0f} us"
           f" (preprocess {plan.preprocess_time_s:.2f}s)")
 
-    measuring = bool(args.shots or args.marginal or args.observable)
+    # --------------------------------------------------- batched serving path
+    if args.batch > 1:
+        B = args.batch
+        psi0s = np.zeros((B, 2**n), dtype=np.complex64)
+        psi0s[np.arange(B), np.arange(B) % (2**n)] = 1.0
+        t0 = time.time()
+        if measuring:
+            from ..sim.measure import measure_batch
+
+            results = measure_batch(ex, psi0s, shots=args.shots, seed=args.seed,
+                                    marginals=marginals,
+                                    observables=args.observable)
+            dt = time.time() - t0
+            print(f"batch of {B} simulated+measured in {dt:.3f}s "
+                  f"({dt / B:.3f}s/state)")
+            for b, res in enumerate(results):
+                bits = []
+                if args.shots:
+                    bits.append("top " + ", ".join(
+                        f"{s}:{c_}" for s, c_ in res.top(3)))
+                bits += [f"<{k}>={v:+.4f}" for k, v in res.expectations.items()]
+                print(f"  [{b}] " + "; ".join(bits))
+            return results
+        out = ex.run_batch(psi0s)
+        out = jax.block_until_ready(out) if not isinstance(out, np.ndarray) else out
+        dt = time.time() - t0
+        print(f"batch of {B} simulated in {dt:.3f}s ({dt / B:.3f}s/state, "
+              f"{B * circ.n_gates / dt:,.0f} gates/s)")
+        if args.check and n <= 24:
+            for b in range(B):
+                f = fidelity(np.asarray(out[b]), simulate(circ, psi0=psi0s[b]))
+                print(f"  fidelity[{b}] vs dense reference: {f:.6f}")
+        return out
+
+    # ------------------------------------------------------ single-state path
     t0 = time.time()
     measurer = None
-    if args.executor == "pjit":
-        from ..sim.executor import StagedExecutor
+    if not use_engine:
+        if args.executor == "pjit":
+            from ..sim.executor import StagedExecutor
 
-        # single-array pjit path; pass a mesh when enough devices exist
-        mesh = None
-        if args.R + args.G > 0 and len(jax.devices()) >= (1 << (args.R + args.G)):
-            rd = 1 << (args.R // 2)
-            rm = 1 << (args.R - args.R // 2)
-            mesh = jax.make_mesh((1 << args.G, rd, rm), ("pod", "data", "model"))
-        ex = StagedExecutor(circ, plan, mesh=mesh)
-        out = ex.run_packed() if measuring else ex.run()
-    elif args.executor == "shardmap":
-        from ..sim.shardmap_executor import ShardMapExecutor
+            ex = StagedExecutor(circ, plan, mesh=_pjit_mesh(args.R, args.G))
+        elif args.executor == "shardmap":
+            from ..sim.shardmap_executor import ShardMapExecutor
 
-        ex = ShardMapExecutor(circ, plan, use_pallas=args.pallas)
-        out = ex.run_packed() if measuring else ex.run()
-    elif args.executor == "offload":
-        from ..sim.offload import OffloadedExecutor
+            ex = ShardMapExecutor(circ, plan, use_pallas=args.pallas)
+        elif args.executor == "offload":
+            from ..sim.offload import OffloadedExecutor
 
-        ex = OffloadedExecutor(circ, plan)
-        out = ex.run(apply_final_remap=not measuring)
-    else:
-        from ..sim.offload import PerGateOffloadExecutor
+            ex = OffloadedExecutor(circ, plan)
+        else:
+            from ..sim.offload import PerGateOffloadExecutor
 
-        ex = PerGateOffloadExecutor(circ, L)
+            ex = PerGateOffloadExecutor(circ, L)
+    if args.executor == "pergate":
         out = ex.run()
+    else:
+        out = ex.run_packed() if measuring else ex.run()
     if measuring:
         from ..sim.measure import Frame, measurer_for
 
@@ -107,8 +178,7 @@ def main(argv=None):
         t0 = time.time()
         res = measure_to_result(
             measurer, backend=args.executor, shots=args.shots, seed=args.seed,
-            marginals=[tuple(int(q) for q in spec.split(","))
-                       for spec in args.marginal],
+            marginals=marginals,
             observables=args.observable,
         )
         print(f"measured in {time.time() - t0:.3f}s")

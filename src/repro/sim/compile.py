@@ -51,6 +51,9 @@ class Op:
     gate_ids: Tuple[int, ...] = ()
     shm_group: int = -1  # >=0: index of the VMEM(SHM) kernel this op belongs to
     gates: Tuple["Op", ...] = ()  # 'shm' only: member ops in application order
+    uid: int = -1  # stable per-CompiledCircuit id, assigned by compile_plan
+    # (cache keys must use `uid`, never `id(op)`: CPython reuses object ids
+    # after GC, which can silently serve a stale tensor)
 
     @property
     def n_gates(self) -> int:
@@ -210,6 +213,12 @@ def compile_plan(
     last_layout = plan.stages[-1].layout
     if tuple(last_layout) != identity or any(flips.values()):
         final = _remap_spec(last_layout, identity, flips)
+    uid = 0
+    for prog in programs:
+        for op in prog.ops:
+            for o in (op,) + op.gates:
+                o.uid = uid
+                uid += 1
     return CompiledCircuit(
         n=n, L=L, R=plan.R, G=plan.G, programs=programs,
         initial_remap=initial, final_remap=final, dtype=np.dtype(dtype),

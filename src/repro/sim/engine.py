@@ -1,0 +1,1168 @@
+"""Unified execution layer: ONE stage-loop core, pluggable backends.
+
+Atlas's execution model is a single pipeline — partition -> stage ->
+kernelize -> compile -> execute — but it historically lived three times over
+in this repo (pjit, shard_map, host-offload executors), each re-implementing
+the stage loop, op dispatch, constant hoisting, inter-stage remap and the
+``run``/``run_packed``/``measurement_frame`` API. This module extracts the
+shared core:
+
+* :class:`ExecutionEngine` owns the compiled program
+  (:class:`repro.sim.compile.CompiledCircuit`), the op-tensor **constant
+  registry** (keyed by the stable ``Op.uid`` the compiler assigns — never
+  ``id(op)``), the **stage loop** (initial remap -> per-stage ops + remap ->
+  optional final remap), and the public ``run`` / ``run_packed`` /
+  ``run_batch`` / ``measurement_frame`` API.
+* a :class:`Backend` supplies state placement plus the two primitives the
+  loop composes — ``apply ops of one stage`` and ``apply one remap`` — in
+  whatever substrate it owns: traced-under-jit global arrays
+  (:class:`PjitBackend`), per-device views inside ``shard_map`` with explicit
+  collectives (:class:`ShardMapBackend`), eager numpy shards streamed from
+  host DRAM (:class:`HostOffloadBackend`), or a per-gate dense oracle that
+  ignores the compiled program entirely (:class:`DenseBackend`).
+* a **compile cache** (:class:`CircuitKey` -> engine LRU in
+  :class:`CompileCache`, entry point :func:`engine_for`) so serving-style
+  repeated traffic skips ILP staging + DP kernelization + stage compilation +
+  XLA compilation after the first request.
+
+The legacy executor modules (``executor``, ``shardmap_executor``,
+``offload``) survive as thin compatibility shims over this engine.
+
+Adding a backend = subclass :class:`Backend`, implement ``prepare`` /
+``execute`` (+ optionally ``execute_batch`` for a fused batch path), and
+register it in :data:`BACKENDS`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, fields as _dc_fields
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.circuit import Circuit
+from ..core.cost_model import CostModel, DEFAULT_COST_MODEL
+from ..core.partition import SimulationPlan, partition
+from .compile import CompiledCircuit, Op, RemapSpec, StageProgram, compile_plan
+
+
+# ======================================================================
+# Shared op application (global-array form; used by pjit & dense-jnp paths)
+# ======================================================================
+
+
+def _dep_index(op: Op, G: int, R: int, L: int) -> Optional[jnp.ndarray]:
+    if not op.dep_bits:
+        return None
+    gdim, rdim = 1 << G, 1 << R
+    g_iota = lax.broadcasted_iota(jnp.int32, (gdim, rdim), 0)
+    r_iota = lax.broadcasted_iota(jnp.int32, (gdim, rdim), 1)
+    idx = jnp.zeros((gdim, rdim), dtype=jnp.int32)
+    for j, p in enumerate(op.dep_bits):
+        if p >= L + R:
+            bit = (g_iota >> (p - L - R)) & 1
+        else:
+            bit = (r_iota >> (p - L)) & 1
+        idx = idx | (bit << j)
+    return idx
+
+
+def apply_op(
+    x: jnp.ndarray, op: Op, G: int, R: int, L: int, dtype, consts=None
+) -> jnp.ndarray:
+    """x: [2^G, 2^R] + (2,)*L; ``consts`` maps ``Op.uid`` -> device tensor."""
+    if op.kind == "shm":
+        # non-Pallas fallback: members apply sequentially (same semantics,
+        # one einsum per member; GSPMD is free to fuse)
+        for m in op.gates:
+            x = apply_op(x, m, G, R, L, dtype, consts)
+        return x
+    k = len(op.local_bits)
+    T = None if consts is None else consts.get(op.uid)
+    if T is None:
+        T = jnp.asarray(op.tensor, dtype=dtype)
+    idx = _dep_index(op, G, R, L)
+
+    if op.kind == "scalar":
+        w = T[idx] if idx is not None else T[0]
+        return x * w.reshape(w.shape + (1,) * L) if idx is not None else x * w
+
+    if op.kind == "diag":
+        w = T[idx] if idx is not None else jnp.broadcast_to(T[0], (1, 1) + T.shape[1:])
+        shape = list(w.shape[:2]) + [
+            2 if ((1 << p) & sum(1 << b for b in op.local_bits)) else 1
+            for p in range(L - 1, -1, -1)
+        ]
+        return x * w.reshape(shape)
+
+    # fused
+    if idx is not None:
+        Tsel = T[idx]  # [2^G, 2^R, 2^k, 2^k]
+    else:
+        Tsel = T[0][None, None]  # [1, 1, 2^k, 2^k] broadcasts over g, r
+    Tv = Tsel.reshape(Tsel.shape[:2] + (2,) * (2 * k))
+    # integer einsum labels
+    lbl_g, lbl_r = 0, 1
+    lbl_loc = {p: 2 + (L - 1 - p) for p in range(L)}  # state axis label per bit
+    fresh = {p: 2 + L + i for i, p in enumerate(op.local_bits)}
+    s_labels = [lbl_g, lbl_r] + [lbl_loc[p] for p in range(L - 1, -1, -1)]
+    kq = list(op.local_bits)
+    t_labels = (
+        [lbl_g if idx is not None else 2 + L + 2 * L,
+         lbl_r if idx is not None else 3 + L + 2 * L]
+        + [fresh[p] for p in reversed(kq)]
+        + [lbl_loc[p] for p in reversed(kq)]
+    )
+    if idx is None:
+        # broadcast dims get their own labels; use explicit size-1 axes
+        Tv = Tv.reshape(Tv.shape[2:])
+        t_labels = t_labels[2:]
+        out_labels = [lbl_g, lbl_r] + [
+            fresh.get(p, lbl_loc[p]) for p in range(L - 1, -1, -1)
+        ]
+        return jnp.einsum(Tv, t_labels, x, s_labels, out_labels)
+    out_labels = [lbl_g, lbl_r] + [
+        fresh.get(p, lbl_loc[p]) for p in range(L - 1, -1, -1)
+    ]
+    return jnp.einsum(Tv, t_labels, x, s_labels, out_labels)
+
+
+def apply_remap(x: jnp.ndarray, spec: RemapSpec, n: int, G: int, R: int, L: int) -> jnp.ndarray:
+    """x packed [2^G, 2^R] + (2,)*L -> full bit transpose -> packed."""
+    full = x.reshape((2,) * n)
+    for p in spec.flip_bits:
+        full = jnp.flip(full, axis=n - 1 - p)
+    perm = [n - 1 - spec.src_bit_of[n - 1 - i] for i in range(n)]
+    full = jnp.transpose(full, perm)
+    return full.reshape((1 << G, 1 << R) + (2,) * L)
+
+
+# ======================================================================
+# Explicit-collective remap choreography (shard_map backend)
+# ======================================================================
+
+
+@dataclass
+class RemapPlan:
+    """Host-precomputed choreography for one inter-stage remap."""
+
+    local_flip_axes: Tuple[int, ...]  # view axes to flip (old local pending flips)
+    pre_perm: Tuple[int, ...]  # local transpose before a2a (view axes)
+    a2a_axes: Tuple[str, ...]  # mesh axis names (desc bit order), may be empty
+    m: int
+    ppermute: Optional[Tuple[Tuple[int, int], ...]]  # full-group (src, dst) pairs
+    post_flip_axes: Tuple[int, ...]  # chunk axes to flip after a2a (flipped
+    # old nonlocal bits that moved into the local tier)
+    post_perm: Tuple[int, ...]  # local transpose after a2a (view axes)
+
+
+def _build_remap_plan(spec: RemapSpec, n: int, L: int) -> RemapPlan:
+    src = spec.src_bit_of
+    flips = set(spec.flip_bits)
+    nonlocal_bits = list(range(L, n))
+
+    s_out = sorted({src[p] for p in nonlocal_bits if src[p] < L}, reverse=True)
+    s_in = sorted({src[p] for p in range(L) if src[p] >= L}, reverse=True)
+    m = len(s_out)
+    assert len(s_in) == m, "local<->nonlocal exchange must be balanced"
+
+    # --- step A: local flips (old local bits with pending flips)
+    local_flip_axes = tuple(L - 1 - s for s in sorted(flips) if s < L)
+
+    # --- step B: pre-transpose: [S_out desc..., remaining local desc...]
+    remaining = [b for b in range(L - 1, -1, -1) if b not in s_out]
+    pre_order_bits = list(s_out) + remaining  # bit ids, new axis order
+    pre_perm = tuple(L - 1 - b for b in pre_order_bits)
+
+    # --- step C/D: after a2a, device bit s_in[t] holds old local bit s_out[t];
+    # local chunk bit (m-1-t) holds old nonlocal bit s_in[t].
+    holder = {s: s for s in nonlocal_bits if s not in s_in}
+    for t in range(m):
+        holder[("chunk", t)] = s_in[t]  # local chunk slot t holds old bit s_in[t]
+        holder[s_in[t]] = s_out[t]  # device axis s_in[t] now holds old local bit
+
+    # ppermute: new device bit p must hold old bit src[p]
+    cur_of = {}  # old bit -> device bit currently holding it
+    for s in nonlocal_bits:
+        cur_of[holder[s]] = s
+    perm_map = {}  # for each device bit position p: source device bit h
+    flip_out = set()
+    for p in nonlocal_bits:
+        h = cur_of[src[p]]
+        perm_map[p] = h
+        if src[p] in flips and src[p] >= L:
+            flip_out.add(p)
+    # flips on old nonlocal bits that move INTO the local tier: apply after
+    # the a2a, when the bit has become local chunk axis t (free local flip).
+    post_flip_axes = tuple(t for t in range(m) if s_in[t] in flips)
+
+    identity = all(perm_map[p] == p for p in nonlocal_bits) and not flip_out
+    pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+    if not identity:
+        nb = n - L
+        pair_list = []
+        for d in range(1 << nb):
+            # device rank d: mesh axes desc bit order => rank bit (p-L) is bit p
+            tgt = 0
+            for p in nonlocal_bits:
+                bit = (d >> (perm_map[p] - L)) & 1
+                if p in flip_out:
+                    bit ^= 1
+                tgt |= bit << (p - L)
+            pair_list.append((d, tgt))
+        pairs = tuple(pair_list)
+
+    # --- step E: final local transpose
+    # current local axes (after a2a, viewed as (2,)*L):
+    #   axes 0..m-1   <- old nonlocal bits s_in[0..m-1] (chunk bits desc)
+    #   axes m..L-1   <- `remaining` old local bits (desc order)
+    cur_axis_of_old_bit = {}
+    for t in range(m):
+        cur_axis_of_old_bit[s_in[t]] = t
+    for j, b in enumerate(remaining):
+        cur_axis_of_old_bit[b] = m + j
+    post = []
+    for i in range(L):  # new view axis i <- new local bit L-1-i
+        p = L - 1 - i
+        post.append(cur_axis_of_old_bit[src[p]])
+    return RemapPlan(
+        local_flip_axes=local_flip_axes,
+        pre_perm=pre_perm,
+        a2a_axes=tuple(f"b{s}" for s in s_in),
+        m=m,
+        ppermute=pairs,
+        post_flip_axes=post_flip_axes,
+        post_perm=tuple(post),
+    )
+
+
+def _apply_remap_plan(view, rp: RemapPlan, L: int, axis_names) -> jnp.ndarray:
+    """Run one remap choreography on a per-device (2,)*L view."""
+    m = rp.m
+    for ax in rp.local_flip_axes:
+        view = jnp.flip(view, axis=ax)
+    x = jnp.transpose(view, rp.pre_perm)
+    if m:
+        x = x.reshape((1 << m, 1 << (L - m)))
+        x = lax.all_to_all(x, rp.a2a_axes, split_axis=0, concat_axis=0, tiled=True)
+        # tiled=True keeps dim0 = 2^m (split into 2^m chunks, exchanged,
+        # re-concatenated along the same axis)
+    if rp.ppermute is not None:
+        x = lax.ppermute(x, axis_names, perm=list(rp.ppermute))
+    x = x.reshape((2,) * L)
+    for ax in rp.post_flip_axes:
+        x = jnp.flip(x, axis=ax)
+    return jnp.transpose(x, rp.post_perm)
+
+
+# ======================================================================
+# Host-side remap + per-shard stage functions (offload backend)
+# ======================================================================
+
+
+def _np_remap(state: np.ndarray, spec: RemapSpec, n: int) -> np.ndarray:
+    """Host bit permutation; accepts flat [2^n] or batched [B, 2^n]."""
+    batched = state.ndim == 2
+    lead = (state.shape[0],) if batched else ()
+    off = 1 if batched else 0
+    full = state.reshape(lead + (2,) * n)
+    for p in spec.flip_bits:
+        full = np.flip(full, axis=off + n - 1 - p)
+    perm = list(range(off)) + [
+        off + n - 1 - spec.src_bit_of[n - 1 - i] for i in range(n)
+    ]
+    full = np.transpose(full, perm)
+    return np.ascontiguousarray(full).reshape(lead + (-1,))
+
+
+def _op_sig(ops) -> Tuple:
+    """Hashable structural signature of an op list ('shm' nests its members);
+    the jitted shard function is cached per signature."""
+    sig = []
+    for op in ops:
+        if op.kind == "shm":
+            sig.append(("shm", tuple((m.kind, m.local_bits) for m in op.gates)))
+        else:
+            sig.append((op.kind, op.local_bits))
+    return tuple(sig)
+
+
+def _flat_ops(ops) -> List[Op]:
+    """Ops in tensor-argument order: shm groups contribute their members."""
+    flat: List[Op] = []
+    for op in ops:
+        flat.extend(op.gates if op.kind == "shm" else (op,))
+    return flat
+
+
+def _sig_arity(op_shapes: Tuple) -> int:
+    return sum(len(e[1]) if e[0] == "shm" else 1 for e in op_shapes)
+
+
+def _build_shard_fn(op_shapes: Tuple, L: int, batched: bool = False):
+    """Jitted per-shard stage function for one op signature. With ``batched``
+    the shard argument carries a leading batch axis that is vmapped over the
+    shared gate tensors — one host<->device pass covers the whole batch."""
+
+    def apply_one(x, kind, local_bits, T):
+        k = len(local_bits)
+        if kind == "scalar":
+            return x * T
+        if kind == "diag":
+            d = T.reshape((2,) * k)
+            shape = [2 if p in local_bits else 1 for p in range(L - 1, -1, -1)]
+            return x * d.reshape(shape)
+        from .apply import apply_matrix
+
+        return apply_matrix(x, T, list(local_bits))
+
+    def fn(shard, *tensors):
+        x = shard.reshape((2,) * L)
+        ti = 0
+        for entry in op_shapes:
+            if entry[0] == "shm":
+                for kind, local_bits in entry[1]:
+                    x = apply_one(x, kind, local_bits, tensors[ti])
+                    ti += 1
+            else:
+                x = apply_one(x, entry[0], entry[1], tensors[ti])
+                ti += 1
+        return x.reshape(-1)
+
+    if batched:
+        fn = jax.vmap(fn, in_axes=(0,) + (None,) * _sig_arity(op_shapes))
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+class JitCache:
+    """Bounded LRU of compiled functions.
+
+    Replaces the old module-level ``@lru_cache(maxsize=None)`` in
+    ``offload.py``: unbounded per-process caches of jitted executables leak
+    compiled programs in long-running serving processes. One instance lives on
+    each backend, so dropping the engine drops its executables too.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, build: Callable):
+        fn = self._d.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = build()
+            self._d[key] = fn
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+        else:
+            self.hits += 1
+            self._d.move_to_end(key)
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+def _shm_operands(op: Op, select: Callable):
+    """Collect the (local_bits, matrix) operand list for one shm group.
+
+    ``select(member)`` resolves a member op to its dep-selected tensor (a
+    per-device value on the shard_map path, a per-shard-batched ``[S, ...]``
+    value on the pjit path). 1-D rows = diagonal member, 2-D = unitary
+    member. Standalone scalar members accumulate into a product that folds
+    into the first matrix so they never cost an extra pass; the product is
+    returned unfolded only when the group has no matrix members.
+    """
+    gate_list = []
+    scal = None
+    for m in op.gates:
+        Tsel = select(m)
+        if m.kind == "scalar":
+            scal = Tsel if scal is None else scal * Tsel
+        else:
+            gate_list.append((m.local_bits, Tsel))
+    if scal is not None and gate_list:
+        bits0, mat0 = gate_list[0]
+        w = scal.reshape(scal.shape + (1,) * (mat0.ndim - scal.ndim))
+        gate_list[0] = (bits0, mat0 * w)
+        scal = None
+    return gate_list, scal
+
+
+# ======================================================================
+# Backends
+# ======================================================================
+
+
+class Backend:
+    """One execution substrate under the engine's stage loop.
+
+    Contract: ``prepare`` places a flat logical [2^n] state (or a [B, 2^n]
+    batch) into the backend's working form; ``execute`` runs the engine's
+    :meth:`ExecutionEngine.stage_loop` over it (traced or eager);
+    ``extract`` turns a final-remapped result back into flat logical order.
+    ``execute_batch`` defaults to a per-element loop — override it when the
+    substrate has a cheaper fused path (vmap, shared streaming pass).
+    """
+
+    name = "?"
+    engine: "ExecutionEngine"
+
+    def setup(self, engine: "ExecutionEngine") -> None:
+        self.engine = engine
+
+    def prepare(self, psi0, batch: bool = False):
+        raise NotImplementedError
+
+    def execute(self, state, apply_final: bool = True):
+        raise NotImplementedError
+
+    def execute_batch(self, states, apply_final: bool = True):
+        outs = [self.execute(states[b], apply_final) for b in range(len(states))]
+        if isinstance(outs[0], np.ndarray):
+            return np.stack(outs)
+        return jnp.stack(outs)
+
+    def extract(self, out, batch: bool = False):
+        return out.reshape(out.shape[0], -1) if batch else out.reshape(-1)
+
+
+class PjitBackend(Backend):
+    """GSPMD path: whole stage loop traced under one ``jax.jit``; remaps are
+    bit transposes + sharding constraints the compiler lowers to collectives.
+    Batches vmap the entire loop (single-array placement only)."""
+
+    name = "pjit"
+
+    def __init__(self, mesh: Optional[Mesh] = None, global_axes=("pod",),
+                 regional_axes=("data", "model"), donate: bool = True):
+        self.mesh = mesh
+        self.global_axes = global_axes
+        self.regional_axes = regional_axes
+        self.donate = donate
+
+    def setup(self, engine: "ExecutionEngine") -> None:
+        super().setup(engine)
+        G, R = engine.G, engine.R
+        if self.mesh is not None:
+            mesh = self.mesh
+            gsize = int(np.prod([mesh.shape[a] for a in self.global_axes])) if self.global_axes else 1
+            rsize = int(np.prod([mesh.shape[a] for a in self.regional_axes])) if self.regional_axes else 1
+            assert gsize == (1 << G), f"pod devices {gsize} != 2^G={1 << G}"
+            assert rsize == (1 << R), f"ICI devices {rsize} != 2^R={1 << R}"
+            self.sharding = NamedSharding(
+                mesh,
+                P(
+                    tuple(self.global_axes) if G else None,
+                    tuple(self.regional_axes) if R else None,
+                    None,
+                ),
+            )
+        else:
+            self.sharding = None
+        dargs = (0,) if self.donate else ()
+        self._fns = {
+            True: jax.jit(partial(self._exec, apply_final=True), donate_argnums=dargs),
+            False: jax.jit(partial(self._exec, apply_final=False), donate_argnums=dargs),
+        }
+        self._batch_fns: Dict[bool, Callable] = {}
+
+    # ------------------------------------------------------------- traced
+    def _wsc(self, x):
+        if self.sharding is not None:
+            x = lax.with_sharding_constraint(x, self.sharding)
+        return x
+
+    def _exec(self, packed, apply_final: bool = True):
+        eng = self.engine
+        G, R, L = eng.G, eng.R, eng.L
+        x = self._wsc(packed.reshape((1 << G, 1 << R) + (2,) * L))
+        x = eng.stage_loop(x, self._apply_ops, self._remap, apply_final)
+        return x.reshape(1 << G, 1 << R, 1 << L)
+
+    def _remap(self, x, slot, spec: RemapSpec):
+        eng = self.engine
+        return self._wsc(apply_remap(x, spec, eng.n, eng.G, eng.R, eng.L))
+
+    def _apply_ops(self, x, prog: StageProgram):
+        eng = self.engine
+        # (plain fused/diag/scalar ops stay XLA einsums so GSPMD is free to
+        # fuse; with use_pallas an shm group runs as ONE pallas_call per
+        # shard, vmapped over the packed shard axes)
+        for op in prog.ops:
+            if eng.use_pallas and op.kind == "shm":
+                x = self._apply_shm_pallas(x, op)
+            else:
+                x = apply_op(x, op, eng.G, eng.R, eng.L, eng.dtype, eng.consts)
+        return x
+
+    def _select_batched(self, m: Op):
+        """[S, ...] per-shard dep-selected tensor for one shm member."""
+        eng = self.engine
+        G, R, L = eng.G, eng.R, eng.L
+        S = 1 << (G + R)
+        T = eng.consts.get(m.uid)
+        if T is None:
+            T = jnp.asarray(m.tensor, dtype=eng.dtype)
+        idx = _dep_index(m, G, R, L)
+        if idx is not None and T.shape[0] > 1:
+            return T[idx.reshape(-1)]  # [S, ...] per-shard variant
+        return jnp.broadcast_to(T[0], (S,) + T.shape[1:])
+
+    def _apply_shm_pallas(self, x, op: Op):
+        eng = self.engine
+        L = eng.L
+        S = 1 << (eng.G + eng.R)
+        xf = x.reshape((S,) + (2,) * L)
+        gate_list, scal = _shm_operands(op, self._select_batched)
+        if not gate_list:
+            return (xf * scal.reshape((S,) + (1,) * L)).reshape(x.shape)
+        bits_list = [b for b, _ in gate_list]
+        mats = [m for _, m in gate_list]
+        from ..kernels import ops as kops
+
+        out = jax.vmap(
+            lambda v, *ms: kops.apply_shm_group(
+                v, list(zip(bits_list, ms)), op.local_bits
+            )
+        )(xf, *mats)
+        return out.reshape(x.shape)
+
+    # ---------------------------------------------------------------- api
+    def prepare(self, psi0, batch: bool = False):
+        eng = self.engine
+        shape = (1 << eng.G, 1 << eng.R, 1 << eng.L)
+        if batch:
+            return jnp.asarray(psi0, dtype=eng.dtype).reshape((-1,) + shape)
+        if psi0 is None:
+            psi0 = jnp.zeros((2 ** eng.n,), dtype=eng.dtype).at[0].set(1.0)
+        packed = jnp.asarray(psi0, dtype=eng.dtype).reshape(shape)
+        if self.sharding is not None:
+            packed = jax.device_put(packed, self.sharding)
+        return packed
+
+    def execute(self, state, apply_final: bool = True):
+        return self._fns[apply_final](state)
+
+    def execute_batch(self, states, apply_final: bool = True):
+        if self.sharding is not None:
+            # keep each element's sharding explicit; vmapping a constrained
+            # loop would need per-axis sharding rules
+            return super().execute_batch(states, apply_final)
+        fn = self._batch_fns.get(apply_final)
+        if fn is None:
+            fn = jax.jit(jax.vmap(partial(self._exec, apply_final=apply_final)))
+            self._batch_fns[apply_final] = fn
+        return fn(states)
+
+    def lower(self, psi_shape_only: bool = True):
+        eng = self.engine
+        shape = jax.ShapeDtypeStruct(
+            (1 << eng.G, 1 << eng.R, 1 << eng.L), eng.dtype,
+            **({"sharding": self.sharding} if self.sharding else {}),
+        )
+        return self._fns[True].lower(shape)
+
+
+class ShardMapBackend(Backend):
+    """Explicit-collective path: the stage loop runs per-device inside
+    ``shard_map`` over a bit-mesh; remaps execute the paper's choreography
+    (local transpose + grouped all_to_all + ppermute + local transpose)."""
+
+    name = "shardmap"
+
+    def __init__(self, devices=None):
+        self.devices = devices
+
+    def setup(self, engine: "ExecutionEngine") -> None:
+        super().setup(engine)
+        n, L = engine.n, engine.L
+        nb = engine.R + engine.G
+        devices = self.devices if self.devices is not None else jax.devices()
+        assert len(devices) >= (1 << nb), f"need {1 << nb} devices, have {len(devices)}"
+        devs = np.array(devices[: 1 << nb]).reshape((2,) * nb if nb else (1,))
+        self.axis_names = tuple(f"b{p}" for p in range(n - 1, L - 1, -1)) or ("b_dummy",)
+        self.mesh = Mesh(devs, self.axis_names)
+        self.sharding = NamedSharding(self.mesh, P(self.axis_names if nb else None))
+        cc = engine.cc
+        self._plans: Dict = {}
+        if cc.initial_remap is not None:
+            self._plans["init"] = _build_remap_plan(cc.initial_remap, n, L)
+        for i, prog in enumerate(cc.programs):
+            if prog.remap_after is not None:
+                self._plans[i] = _build_remap_plan(prog.remap_after, n, L)
+        if cc.final_remap is not None:
+            self._plans["final"] = _build_remap_plan(cc.final_remap, n, L)
+        self._fns: Dict[bool, Callable] = {True: self._make_fn(True)}
+        # (the packed variant is built lazily on first run_packed)
+
+    def _make_fn(self, apply_final: bool):
+        nb = self.engine.R + self.engine.G
+        fn = shard_map(
+            partial(self._device_fn, apply_final=apply_final),
+            mesh=self.mesh,
+            in_specs=P(self.axis_names if nb else None),
+            out_specs=P(self.axis_names if nb else None),
+            check_rep=False,
+        )
+        return jax.jit(fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- traced
+    def _device_fn(self, shard, apply_final: bool = True):
+        view = shard.reshape((2,) * self.engine.L)
+        view = self.engine.stage_loop(view, self._apply_ops, self._remap, apply_final)
+        return view.reshape(-1)
+
+    def _remap(self, view, slot, spec: RemapSpec):
+        return _apply_remap_plan(view, self._plans[slot], self.engine.L, self.axis_names)
+
+    def _apply_ops(self, view, prog: StageProgram):
+        for op in prog.ops:
+            view = self._apply_op(view, op)
+        return view
+
+    def _dep_idx(self, op: Op):
+        idx = 0
+        for j, p in enumerate(op.dep_bits):
+            idx = idx + (lax.axis_index(f"b{p}").astype(jnp.int32) << j)
+        return idx
+
+    def _select(self, op: Op):
+        """Per-device tensor slice: dep-batched variant via ``lax.axis_index``."""
+        T = self.engine.consts.get(op.uid)
+        if T is None:
+            T = jnp.asarray(op.tensor, dtype=self.engine.dtype)
+        if op.dep_bits and T.shape[0] > 1:
+            return T[self._dep_idx(op)]
+        return T[0]
+
+    def _apply_op(self, view, op: Op):
+        eng = self.engine
+        if op.kind == "shm":
+            return self._apply_shm(view, op)
+        Tsel = self._select(op)
+        if op.kind == "scalar":
+            return view * Tsel
+        if op.kind == "diag":
+            L = eng.L
+            shape = [2 if p in op.local_bits else 1 for p in range(L - 1, -1, -1)]
+            return view * Tsel.reshape(shape)
+        from .apply import apply_matrix
+
+        if eng.use_pallas and len(op.local_bits) >= 1:
+            from ..kernels import ops as kops
+
+            return kops.apply_fused_shard(view, Tsel, op.local_bits)
+        return apply_matrix(view, Tsel, list(op.local_bits))
+
+    def _apply_shm(self, view, op: Op):
+        """One shm group = one memory pass. On the Pallas path the whole
+        member list runs inside a single ``pallas_call``; member matrices are
+        the dep-selected variants, standalone scalar members fold into the
+        first matrix so they never cost an extra pass."""
+        if not self.engine.use_pallas:
+            for m in op.gates:
+                view = self._apply_op(view, m)
+            return view
+        from ..kernels import ops as kops
+
+        gate_list, scal = _shm_operands(op, self._select)
+        if not gate_list:
+            return view * scal
+        return kops.apply_shm_group(view, gate_list, op.local_bits)
+
+    # ---------------------------------------------------------------- api
+    def _fn(self, apply_final: bool):
+        fn = self._fns.get(apply_final)
+        if fn is None:
+            fn = self._make_fn(apply_final)
+            self._fns[apply_final] = fn
+        return fn
+
+    def prepare(self, psi0, batch: bool = False):
+        eng = self.engine
+        if batch:
+            return jnp.asarray(psi0, dtype=eng.dtype).reshape(-1, 1 << eng.n)
+        if psi0 is None:
+            psi0 = jnp.zeros((2 ** eng.n,), dtype=eng.dtype).at[0].set(1.0)
+        return jax.device_put(jnp.asarray(psi0, dtype=eng.dtype), self.sharding)
+
+    def execute(self, state, apply_final: bool = True):
+        return self._fn(apply_final)(state)
+
+    def execute_batch(self, states, apply_final: bool = True):
+        # collectives preclude a plain vmap over the shard program; run the
+        # batch through the (already compiled) per-element function instead
+        fn = self._fn(apply_final)
+        return jnp.stack([
+            fn(jax.device_put(states[b], self.sharding))
+            for b in range(states.shape[0])
+        ])
+
+    def extract(self, out, batch: bool = False):
+        return out  # device fn already returns flat [2^n] (or [B, 2^n])
+
+    def lower(self):
+        eng = self.engine
+        shape = jax.ShapeDtypeStruct((1 << eng.n,), eng.dtype, sharding=self.sharding)
+        return self._fns[True].lower(shape)
+
+
+class HostOffloadBackend(Backend):
+    """Host-DRAM streaming path (paper §VII-C): the state lives in host
+    memory as ``2^(R+G)`` shards of ``2^L`` amplitudes; each stage streams
+    every shard through the device once (double-buffered), and remaps are
+    host-side bit permutations. A batch streams ``[B, 2^L]`` blocks through a
+    vmapped shard function — one host<->device pass covers the whole batch."""
+
+    name = "offload"
+
+    def __init__(self, jit_cache_size: int = 64):
+        self.jit_cache = JitCache(maxsize=jit_cache_size)
+
+    def setup(self, engine: "ExecutionEngine") -> None:
+        super().setup(engine)
+        self.stats = {
+            "shard_transfers": 0,
+            "host_remaps": 0,
+            "tensor_uploads": 0,  # full-tensor H2D uploads (once per op)
+            "tensor_slice_reuse": 0,  # per-shard slices served from device
+            "overlapped_dispatches": 0,  # shard s+1 in flight while s drains
+            "memory_passes": 0,  # device HBM passes (top-level op count)
+        }
+        self._uploaded: set = set()  # op uids whose tensor reached the device
+        self._dev_slices: Dict = {}  # (op.uid, combo) -> device slice
+
+    # ------------------------------------------------------------ tensors
+    def _dep_combo(self, op: Op, shard_id: int) -> int:
+        idx = 0
+        for j, p in enumerate(op.dep_bits):
+            bit = (shard_id >> (p - self.engine.L)) & 1
+            idx |= bit << j
+        return idx
+
+    def resolve(self, op: Op, shard_id: int):
+        """Device tensor slice for this shard (dep bits are known values).
+
+        The full dep-batched tensor lives in the engine's constant registry
+        (ONE upload per op); per-shard slices are device-side gathers cached
+        by ``(op.uid, dep-combo)`` — no per-shard host->device re-upload.
+        """
+        full = self.engine.consts[op.uid]
+        if op.uid not in self._uploaded:
+            self._uploaded.add(op.uid)
+            self.stats["tensor_uploads"] += 1
+        combo = self._dep_combo(op, shard_id) if op.dep_bits else 0
+        key = (op.uid, combo)
+        sl = self._dev_slices.get(key)
+        if sl is None:
+            sl = full[combo]
+            self._dev_slices[key] = sl
+        else:
+            self.stats["tensor_slice_reuse"] += 1
+        return sl
+
+    def shard_fn(self, sig: Tuple, batched: bool = False):
+        eng = self.engine
+        key = (sig, eng.L, str(eng.np_dtype), batched)
+        return self.jit_cache.get(
+            key, lambda: _build_shard_fn(sig, eng.L, batched=batched)
+        )
+
+    # -------------------------------------------------------------- eager
+    def _stream_stage(self, state: np.ndarray, prog: StageProgram) -> np.ndarray:
+        eng = self.engine
+        L = eng.L
+        batched = state.ndim == 2
+        fn = self.shard_fn(_op_sig(prog.ops), batched=batched)
+        flat = _flat_ops(prog.ops)
+        self.stats["memory_passes"] += prog.n_passes
+        n_shards = 1 << eng.n_nonlocal
+        # double-buffered streaming: shard s+1 is uploaded and dispatched
+        # BEFORE blocking on shard s's result, so H2D/compute/D2H overlap
+        # (donated ping-pong buffers: fn donates its input shard)
+        pending = None  # (shard_id, in-flight device result)
+        for s in range(n_shards):
+            lo, hi = s << L, (s + 1) << L
+            tensors = [self.resolve(op, s) for op in flat]
+            block = np.ascontiguousarray(state[..., lo:hi])
+            out = fn(jax.device_put(block), *tensors)
+            if pending is not None:
+                ps, pout = pending
+                state[..., ps << L:(ps + 1) << L] = np.asarray(pout)
+                self.stats["overlapped_dispatches"] += 1
+            pending = (s, out)
+            self.stats["shard_transfers"] += 1
+        if pending is not None:
+            ps, pout = pending
+            state[..., ps << L:(ps + 1) << L] = np.asarray(pout)
+        return state
+
+    def _remap(self, state: np.ndarray, slot, spec: RemapSpec) -> np.ndarray:
+        self.stats["host_remaps"] += 1
+        return _np_remap(state, spec, self.engine.n)
+
+    # ---------------------------------------------------------------- api
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of shard dispatches issued while the previous shard was
+        still in flight (1 - stages/transfers at best: one drain per stage)."""
+        return self.stats["overlapped_dispatches"] / max(
+            self.stats["shard_transfers"], 1
+        )
+
+    def prepare(self, psi0, batch: bool = False):
+        eng = self.engine
+        if batch:
+            arr = np.array(psi0, dtype=eng.np_dtype).reshape(-1, 1 << eng.n)
+            return arr
+        state = np.zeros(1 << eng.n, dtype=eng.np_dtype)
+        if psi0 is None:
+            state[0] = 1.0
+        else:
+            state[:] = np.asarray(psi0, dtype=eng.np_dtype)
+        return state
+
+    def execute(self, state, apply_final: bool = True):
+        return self.engine.stage_loop(state, self._stream_stage, self._remap, apply_final)
+
+    def execute_batch(self, states, apply_final: bool = True):
+        return self.execute(states, apply_final)  # primitives are batch-aware
+
+    def extract(self, out, batch: bool = False):
+        return out  # already flat [2^n] / [B, 2^n]
+
+
+class DenseBackend(Backend):
+    """Per-gate dense oracle behind the same engine API.
+
+    Deliberately a *different algorithm*: it ignores the compiled stage
+    programs entirely and applies the raw gate list to the dense state, so an
+    engine-vs-dense comparison cross-checks the whole compile + execute
+    pipeline. ``run_packed`` re-stores the logical state in the compiled
+    frame's physical order, making it bit-comparable to the planned backends.
+    """
+
+    name = "dense"
+
+    def prepare(self, psi0, batch: bool = False):
+        eng = self.engine
+        if batch:
+            return np.asarray(psi0, dtype=eng.np_dtype).reshape(-1, 1 << eng.n)
+        if psi0 is None:
+            state = np.zeros(1 << eng.n, dtype=eng.np_dtype)
+            state[0] = 1.0
+            return state
+        return np.asarray(psi0, dtype=eng.np_dtype).reshape(-1)
+
+    def execute(self, state, apply_final: bool = True):
+        from .statevector import simulate
+
+        psi = np.asarray(simulate(self.engine.circuit, psi0=state,
+                                  dtype=self.engine.dtype))
+        if not apply_final:
+            frame = self.engine.measurement_frame
+            idx = frame.phys_to_logical(np.arange(psi.size, dtype=np.int64))
+            psi = psi[idx]
+        return psi
+
+    def extract(self, out, batch: bool = False):
+        return out
+
+
+BACKENDS: Dict[str, Callable[..., Backend]] = {
+    "pjit": PjitBackend,
+    "shardmap": ShardMapBackend,
+    "offload": HostOffloadBackend,
+    "dense": DenseBackend,
+}
+
+
+# ======================================================================
+# The engine
+# ======================================================================
+
+
+class ExecutionEngine:
+    """Backend-agnostic staged executor: one stage loop, one constant
+    registry, one public API — the backend only supplies the substrate."""
+
+    def __init__(
+        self,
+        circuit: Circuit,
+        plan: SimulationPlan,
+        backend: Union[str, Backend] = "pjit",
+        dtype=jnp.complex64,
+        use_pallas: bool = False,
+        peephole: bool = True,
+        compiled: Optional[CompiledCircuit] = None,
+        **backend_kw,
+    ):
+        self.circuit = circuit
+        self.plan = plan
+        self.dtype = dtype
+        self.np_dtype = np.dtype(dtype)
+        self.use_pallas = use_pallas
+        self.cc: CompiledCircuit = (
+            compiled if compiled is not None
+            else compile_plan(circuit, plan, dtype=self.np_dtype, peephole=peephole)
+        )
+        self.n, self.L, self.R, self.G = self.cc.n, self.cc.L, self.cc.R, self.cc.G
+        # op-tensor constant registry, keyed by stable ``Op.uid``: one device
+        # array per tensor, shared by every trace/backend call. Built eagerly
+        # — inside a jit trace the dtype cast would produce (leaked) tracers.
+        self.consts: Dict[int, jnp.ndarray] = {}
+        for prog in self.cc.programs:
+            for op in prog.ops:
+                for o in (op,) + op.gates:
+                    if o.tensor.size:
+                        self.consts[o.uid] = jnp.asarray(o.tensor, dtype=self.dtype)
+        if isinstance(backend, str):
+            backend = BACKENDS[backend](**backend_kw)
+        elif backend_kw:
+            raise TypeError("backend_kw only apply when backend is given by name")
+        self.backend = backend
+        backend.setup(self)
+
+    # ------------------------------------------------------------- shared
+    @property
+    def n_nonlocal(self) -> int:
+        return self.R + self.G
+
+    def stage_loop(self, x, ops_fn, remap_fn, apply_final: bool = True):
+        """THE stage loop — every backend (traced or eager) runs this.
+
+        ``ops_fn(x, prog)`` applies one stage's op list; ``remap_fn(x, slot,
+        spec)`` applies one inter-stage remap, where ``slot`` is ``"init"``,
+        the stage index, or ``"final"`` (backends with precomputed remap
+        artifacts index them by slot; others use ``spec`` directly).
+        """
+        cc = self.cc
+        if cc.initial_remap is not None:
+            x = remap_fn(x, "init", cc.initial_remap)
+        for i, prog in enumerate(cc.programs):
+            x = ops_fn(x, prog)
+            if prog.remap_after is not None:
+                x = remap_fn(x, i, prog.remap_after)
+        if apply_final and cc.final_remap is not None:
+            x = remap_fn(x, "final", cc.final_remap)
+        return x
+
+    # ---------------------------------------------------------------- api
+    def run(self, psi0=None):
+        """psi0: flat [2^n] in logical order (defaults to |0..0>). Returns
+        the final flat state in logical order."""
+        state = self.backend.prepare(psi0)
+        return self.backend.extract(self.backend.execute(state, True))
+
+    def run_packed(self, psi0=None):
+        """Run but *skip the final inter-stage remap*: returns the state in
+        the last stage's physical layout (with lazy flips still pending).
+        Pair with :attr:`measurement_frame` and :mod:`repro.sim.measure` —
+        sampling/marginals/expectations undo the layout on indices, which is
+        far cheaper than permuting 2^n amplitudes."""
+        return self.backend.execute(self.backend.prepare(psi0), False)
+
+    def run_batch(self, psi0s, apply_final: bool = True):
+        """Run a batch of initial states ``psi0s: [B, 2^n]`` through the
+        shard program. Returns ``[B, 2^n]`` in logical order, or the batched
+        packed layout when ``apply_final=False`` (measure each element via
+        :func:`repro.sim.measure.measure_batch`)."""
+        states = self.backend.prepare(psi0s, batch=True)
+        out = self.backend.execute_batch(states, apply_final)
+        return self.backend.extract(out, batch=True) if apply_final else out
+
+    @property
+    def measurement_frame(self):
+        from .measure import Frame
+
+        return Frame.from_compiled(self.cc)
+
+    def __getattr__(self, name: str):
+        # backend-specific surface (mesh, sharding, stats, lower, ...)
+        if name.startswith("_"):
+            raise AttributeError(name)
+        backend = self.__dict__.get("backend")
+        if backend is None:
+            raise AttributeError(name)
+        return getattr(backend, name)
+
+
+# ======================================================================
+# Compile cache (serving: compile once, run many)
+# ======================================================================
+
+
+def _canon(v):
+    """Canonicalize a cache-key component into a stable, reprable value."""
+    if isinstance(v, (np.floating, np.integer)):
+        return v.item()
+    if isinstance(v, (tuple, list)):
+        return tuple(_canon(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _canon(x)) for k, x in v.items()))
+    return v
+
+
+def _placement_fingerprint(backend_kw: Optional[dict]) -> Tuple:
+    """Stable fingerprint of backend placement kwargs (mesh, devices, ...):
+    two requests whose placements differ must NOT share a cached engine."""
+    if not backend_kw:
+        return ()
+    out = []
+    for k in sorted(backend_kw):
+        v = backend_kw[k]
+        if isinstance(v, Mesh):
+            v = (tuple(v.shape.items()),
+                 tuple(d.id for d in np.asarray(v.devices).flat))
+        elif isinstance(v, (list, tuple)) and v and hasattr(v[0], "id"):
+            v = tuple(d.id for d in v)  # a device list
+        else:
+            v = _canon(v)
+        out.append((k, v))
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class CircuitKey:
+    """Stable fingerprint of (circuit structure, architecture split, plan/
+    compile knobs): equal keys => the same compiled executable is valid."""
+
+    digest: str
+
+    @staticmethod
+    def make(
+        circuit: Circuit,
+        L: int,
+        R: int = 0,
+        G: int = 0,
+        *,
+        backend: str = "pjit",
+        dtype=jnp.complex64,
+        use_pallas: bool = False,
+        peephole: bool = True,
+        staging_method: str = "ilp",
+        kernelize_method: str = "dp",
+        cost_model: CostModel = DEFAULT_COST_MODEL,
+        extra=(),
+    ) -> "CircuitKey":
+        gates = tuple(
+            (g.name, tuple(g.qubits), tuple(float(p) for p in g.params))
+            for g in circuit.gates
+        )
+        cm = tuple(
+            (f.name, _canon(getattr(cost_model, f.name)))
+            for f in _dc_fields(cost_model)
+        )
+        payload = (
+            circuit.n_qubits, gates, (L, R, G), str(backend),
+            str(np.dtype(dtype)), bool(use_pallas), bool(peephole),
+            staging_method, kernelize_method, cm, _canon(extra),
+        )
+        return CircuitKey(hashlib.sha256(repr(payload).encode()).hexdigest())
+
+
+class CompileCache:
+    """LRU of :class:`CircuitKey` -> compiled :class:`ExecutionEngine`.
+
+    A cached engine keeps its plan, compiled stage programs, hoisted device
+    constants AND jitted executables warm, so a serving-style repeat of the
+    same circuit skips ILP staging, DP kernelization, stage compilation and
+    XLA compilation entirely.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        self._d: "OrderedDict[CircuitKey, ExecutionEngine]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: CircuitKey) -> Optional[ExecutionEngine]:
+        eng = self._d.get(key)
+        if eng is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._d.move_to_end(key)
+        return eng
+
+    def put(self, key: CircuitKey, engine: ExecutionEngine) -> None:
+        self._d[key] = engine
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: CircuitKey) -> bool:
+        return key in self._d
+
+
+DEFAULT_CACHE = CompileCache()
+
+
+def engine_for(
+    circuit: Circuit,
+    L: int,
+    R: int = 0,
+    G: int = 0,
+    *,
+    backend: str = "pjit",
+    dtype=jnp.complex64,
+    use_pallas: bool = False,
+    peephole: bool = True,
+    staging_method: str = "ilp",
+    kernelize_method: str = "dp",
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    cache: Optional[CompileCache] = DEFAULT_CACHE,
+    plan: Optional[SimulationPlan] = None,
+    backend_kw: Optional[dict] = None,
+    **plan_kw,
+) -> ExecutionEngine:
+    """The serving entry point: partition + compile + build an engine, or
+    return the cached engine for an identical request.
+
+    Pass ``cache=None`` to force a fresh build; pass an explicit ``plan`` to
+    bypass partitioning (such engines are NOT cached — the plan is outside
+    the key). ``backend_kw`` (e.g. a pjit mesh) IS part of the key, via a
+    placement fingerprint, so requests with different meshes/devices never
+    share a cached engine.
+    """
+    if plan is not None:
+        return ExecutionEngine(circuit, plan, backend=backend, dtype=dtype,
+                               use_pallas=use_pallas, peephole=peephole,
+                               **(backend_kw or {}))
+    key = CircuitKey.make(
+        circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
+        peephole=peephole, staging_method=staging_method,
+        kernelize_method=kernelize_method, cost_model=cost_model,
+        extra=(tuple(sorted((k, _canon(v)) for k, v in plan_kw.items())),
+               _placement_fingerprint(backend_kw)),
+    )
+    eng = cache.get(key) if cache is not None else None
+    if eng is None:
+        plan = partition(circuit, L, R, G, staging_method=staging_method,
+                         kernelize_method=kernelize_method,
+                         cost_model=cost_model, **plan_kw)
+        eng = ExecutionEngine(circuit, plan, backend=backend, dtype=dtype,
+                              use_pallas=use_pallas, peephole=peephole,
+                              **(backend_kw or {}))
+        if cache is not None:
+            cache.put(key, eng)
+    return eng

@@ -1,4 +1,8 @@
-"""Distributed staged executor (pjit/GSPMD path).
+"""Distributed staged executor (pjit/GSPMD path) — compatibility shim.
+
+The stage loop, op dispatch, constant hoisting and remap logic now live in
+:mod:`repro.sim.engine` (:class:`ExecutionEngine` + :class:`PjitBackend`);
+this module keeps the historical entry points alive.
 
 State layout: packed array ``[2^G, 2^R, 2^L]`` with
 ``NamedSharding(mesh, P(global_axes, regional_axes, None))`` — the pod axis
@@ -13,108 +17,24 @@ NCCL choreography replaced by compiler-scheduled collectives.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from ..core.circuit import Circuit
 from ..core.partition import SimulationPlan
-from .compile import CompiledCircuit, Op, RemapSpec, StageProgram, compile_plan
-
-
-def _dep_index(op: Op, G: int, R: int, L: int) -> Optional[jnp.ndarray]:
-    if not op.dep_bits:
-        return None
-    gdim, rdim = 1 << G, 1 << R
-    g_iota = lax.broadcasted_iota(jnp.int32, (gdim, rdim), 0)
-    r_iota = lax.broadcasted_iota(jnp.int32, (gdim, rdim), 1)
-    idx = jnp.zeros((gdim, rdim), dtype=jnp.int32)
-    for j, p in enumerate(op.dep_bits):
-        if p >= L + R:
-            bit = (g_iota >> (p - L - R)) & 1
-        else:
-            bit = (r_iota >> (p - L)) & 1
-        idx = idx | (bit << j)
-    return idx
-
-
-def apply_op(
-    x: jnp.ndarray, op: Op, G: int, R: int, L: int, dtype, consts=None
-) -> jnp.ndarray:
-    """x: [2^G, 2^R] + (2,)*L."""
-    if op.kind == "shm":
-        # non-Pallas fallback: members apply sequentially (same semantics,
-        # one einsum per member; GSPMD is free to fuse)
-        for m in op.gates:
-            x = apply_op(x, m, G, R, L, dtype, consts)
-        return x
-    k = len(op.local_bits)
-    T = None if consts is None else consts.get(id(op))
-    if T is None:
-        T = jnp.asarray(op.tensor, dtype=dtype)
-    idx = _dep_index(op, G, R, L)
-
-    if op.kind == "scalar":
-        w = T[idx] if idx is not None else T[0]
-        return x * w.reshape(w.shape + (1,) * L) if idx is not None else x * w
-
-    if op.kind == "diag":
-        w = T[idx] if idx is not None else jnp.broadcast_to(T[0], (1, 1) + T.shape[1:])
-        shape = list(w.shape[:2]) + [
-            2 if ((1 << p) & sum(1 << b for b in op.local_bits)) else 1
-            for p in range(L - 1, -1, -1)
-        ]
-        return x * w.reshape(shape)
-
-    # fused
-    if idx is not None:
-        Tsel = T[idx]  # [2^G, 2^R, 2^k, 2^k]
-    else:
-        Tsel = T[0][None, None]  # [1, 1, 2^k, 2^k] broadcasts over g, r
-    Tv = Tsel.reshape(Tsel.shape[:2] + (2,) * (2 * k))
-    # integer einsum labels
-    lbl_g, lbl_r = 0, 1
-    lbl_loc = {p: 2 + (L - 1 - p) for p in range(L)}  # state axis label per bit
-    fresh = {p: 2 + L + i for i, p in enumerate(op.local_bits)}
-    s_labels = [lbl_g, lbl_r] + [lbl_loc[p] for p in range(L - 1, -1, -1)]
-    kq = list(op.local_bits)
-    t_labels = (
-        [lbl_g if idx is not None else 2 + L + 2 * L,
-         lbl_r if idx is not None else 3 + L + 2 * L]
-        + [fresh[p] for p in reversed(kq)]
-        + [lbl_loc[p] for p in reversed(kq)]
-    )
-    if idx is None:
-        # broadcast dims get their own labels; use explicit size-1 axes
-        Tv = Tv.reshape(Tv.shape[2:])
-        t_labels = t_labels[2:]
-        out_labels = [lbl_g, lbl_r] + [
-            fresh.get(p, lbl_loc[p]) for p in range(L - 1, -1, -1)
-        ]
-        return jnp.einsum(Tv, t_labels, x, s_labels, out_labels)
-    out_labels = [lbl_g, lbl_r] + [
-        fresh.get(p, lbl_loc[p]) for p in range(L - 1, -1, -1)
-    ]
-    return jnp.einsum(Tv, t_labels, x, s_labels, out_labels)
-
-
-def apply_remap(x: jnp.ndarray, spec: RemapSpec, n: int, G: int, R: int, L: int) -> jnp.ndarray:
-    """x packed [2^G, 2^R] + (2,)*L -> full bit transpose -> packed."""
-    full = x.reshape((2,) * n)
-    for p in spec.flip_bits:
-        full = jnp.flip(full, axis=n - 1 - p)
-    perm = [n - 1 - spec.src_bit_of[n - 1 - i] for i in range(n)]
-    full = jnp.transpose(full, perm)
-    return full.reshape((1 << G, 1 << R) + (2,) * L)
+# re-exported for backward compatibility
+from .engine import ExecutionEngine, PjitBackend, _dep_index, apply_op, apply_remap  # noqa: F401
 
 
 class StagedExecutor:
-    """Executes a compiled plan under jit (optionally on a device mesh)."""
+    """Executes a compiled plan under jit (optionally on a device mesh).
+
+    Thin shim over ``ExecutionEngine(backend=PjitBackend(...))``; everything
+    not defined here (``run``, ``run_packed``, ``run_batch``,
+    ``measurement_frame``, ``lower``, ``cc``, ...) is forwarded to the engine.
+    """
 
     def __init__(
         self,
@@ -127,151 +47,17 @@ class StagedExecutor:
         use_pallas: bool = False,
         donate: bool = True,
     ):
-        self.circuit = circuit
-        self.plan = plan
-        self.cc: CompiledCircuit = compile_plan(circuit, plan, dtype=np.dtype(dtype))
-        self.mesh = mesh
-        self.dtype = dtype
-        self.use_pallas = use_pallas
-        self.n, self.L, self.R, self.G = self.cc.n, self.cc.L, self.cc.R, self.cc.G
-        if mesh is not None:
-            gsize = int(np.prod([mesh.shape[a] for a in global_axes])) if global_axes else 1
-            rsize = int(np.prod([mesh.shape[a] for a in regional_axes])) if regional_axes else 1
-            assert gsize == (1 << self.G), f"pod devices {gsize} != 2^G={1 << self.G}"
-            assert rsize == (1 << self.R), f"ICI devices {rsize} != 2^R={1 << self.R}"
-            self.sharding = NamedSharding(
-                mesh,
-                P(
-                    tuple(global_axes) if self.G else None,
-                    tuple(regional_axes) if self.R else None,
-                    None,
-                ),
-            )
-        else:
-            self.sharding = None
-        # hoist op tensors into per-executor device constants (shared traces)
-        self._consts = {}
-        for prog in self.cc.programs:
-            for op in prog.ops:
-                for o in (op,) + op.gates:
-                    if o.tensor.size:
-                        self._consts[id(o)] = jnp.asarray(o.tensor, dtype=dtype)
-        donate = (0,) if donate else ()
-        self._fn = jax.jit(lambda x: self._run(x, True), donate_argnums=donate)
-        self._fn_packed = jax.jit(lambda x: self._run(x, False), donate_argnums=donate)
-
-    # ------------------------------------------------------------------ run
-    def _wsc(self, x):
-        if self.sharding is not None:
-            x = lax.with_sharding_constraint(x, self.sharding)
-        return x
-
-    def _apply_local_ops(self, x, prog: StageProgram):
-        n, G, R, L = self.n, self.G, self.R, self.L
-        # (plain fused/diag/scalar ops stay XLA einsums so GSPMD is free to
-        # fuse; with use_pallas an shm group runs as ONE pallas_call per
-        # shard, vmapped over the packed shard axes)
-        for op in prog.ops:
-            if self.use_pallas and op.kind == "shm":
-                x = self._apply_shm_pallas(x, op)
-            else:
-                x = apply_op(x, op, G, R, L, self.dtype, self._consts)
-        return x
-
-    def _apply_shm_pallas(self, x, op: Op):
-        G, R, L = self.G, self.R, self.L
-        S = 1 << (G + R)
-        xf = x.reshape((S,) + (2,) * L)
-        bits_list = []
-        mats = []
-        scal = None  # [S] product of standalone scalar members
-        for m in op.gates:
-            T = self._consts.get(id(m))
-            if T is None:
-                T = jnp.asarray(m.tensor, dtype=self.dtype)
-            idx = _dep_index(m, G, R, L)
-            if idx is not None and T.shape[0] > 1:
-                Tsel = T[idx.reshape(-1)]  # [S, ...] per-shard variant
-            else:
-                Tsel = jnp.broadcast_to(T[0], (S,) + T.shape[1:])
-            if m.kind == "scalar":
-                scal = Tsel if scal is None else scal * Tsel
-            else:
-                # 1-D rows = diagonal member, 2-D rows = unitary member
-                bits_list.append(m.local_bits)
-                mats.append(Tsel)
-        if scal is not None:
-            if not mats:
-                return (xf * scal.reshape((S,) + (1,) * L)).reshape(x.shape)
-            extra = (1,) * (mats[0].ndim - 1)
-            mats[0] = mats[0] * scal.reshape((S,) + extra)
-        from ..kernels import ops as kops
-
-        out = jax.vmap(
-            lambda v, *ms: kops.apply_shm_group(
-                v, list(zip(bits_list, ms)), op.local_bits
-            )
-        )(xf, *mats)
-        return out.reshape(x.shape)
-
-    def _run(self, psi_packed: jnp.ndarray, apply_final: bool = True) -> jnp.ndarray:
-        n, G, R, L = self.n, self.G, self.R, self.L
-        x = self._wsc(psi_packed.reshape((1 << G, 1 << R) + (2,) * L))
-        if self.cc.initial_remap is not None:
-            x = self._wsc(apply_remap(x, self.cc.initial_remap, n, G, R, L))
-        for prog in self.cc.programs:
-            x = self._apply_local_ops(x, prog)
-            if prog.remap_after is not None:
-                x = self._wsc(apply_remap(x, prog.remap_after, n, G, R, L))
-        if apply_final and self.cc.final_remap is not None:
-            x = self._wsc(apply_remap(x, self.cc.final_remap, n, G, R, L))
-        return x.reshape(1 << G, 1 << R, 1 << L)
-
-    def run(self, psi0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        """psi0: flat [2^n] in logical order (defaults to |0..0>). Returns the
-        final flat state in logical order."""
-        n = self.n
-        if psi0 is None:
-            psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
-        packed = jnp.asarray(psi0, dtype=self.dtype).reshape(
-            (1 << self.G, 1 << self.R, 1 << self.L)
+        self.engine = ExecutionEngine(
+            circuit, plan,
+            backend=PjitBackend(mesh=mesh, global_axes=global_axes,
+                                regional_axes=regional_axes, donate=donate),
+            dtype=dtype, use_pallas=use_pallas,
         )
-        if self.sharding is not None:
-            packed = jax.device_put(packed, self.sharding)
-        out = self._fn(packed)
-        return out.reshape(-1)
 
-    # ---------------------------------------------------------- measurement
-    def run_packed(self, psi0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        """Run but *skip the final inter-stage remap*: returns the packed
-        ``[2^G, 2^R, 2^L]`` state in the last stage's physical layout (with
-        lazy flips still pending). Pair with :attr:`measurement_frame` and
-        :mod:`repro.sim.measure` — sampling/marginals/expectations undo the
-        layout on indices, which is far cheaper than permuting 2^n
-        amplitudes."""
-        n = self.n
-        if psi0 is None:
-            psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
-        packed = jnp.asarray(psi0, dtype=self.dtype).reshape(
-            (1 << self.G, 1 << self.R, 1 << self.L)
-        )
-        if self.sharding is not None:
-            packed = jax.device_put(packed, self.sharding)
-        return self._fn_packed(packed)
-
-    @property
-    def measurement_frame(self):
-        from .measure import Frame
-
-        return Frame.from_compiled(self.cc)
-
-    # --------------------------------------------------------- introspection
-    def lower(self, psi_shape_only: bool = True):
-        shape = jax.ShapeDtypeStruct(
-            (1 << self.G, 1 << self.R, 1 << self.L), self.dtype,
-            **({"sharding": self.sharding} if self.sharding else {}),
-        )
-        return self._fn.lower(shape)
+    def __getattr__(self, name: str):
+        if name == "engine":
+            raise AttributeError(name)
+        return getattr(self.engine, name)
 
 
 def simulate_partitioned(

@@ -722,24 +722,17 @@ def simulate_and_measure(
 
             Lq = L if L is not None else n - R - G
             plan = partition(circuit, Lq, R, G, **plan_kw)
-        if backend == "pjit":
-            from .executor import StagedExecutor
+        # all planned backends go through the ONE unified engine; the backend
+        # name doubles as the engine backend name
+        from .engine import ExecutionEngine
 
-            ex = StagedExecutor(circuit, plan, mesh=mesh, dtype=dtype)
-            state = ex.run_packed(psi0)
-            measurer = ShardedMeasurer(state, ex.measurement_frame)
-        elif backend == "shardmap":
-            from .shardmap_executor import ShardMapExecutor
-
-            ex = ShardMapExecutor(circuit, plan, dtype=dtype, use_pallas=use_pallas)
-            state = ex.run_packed(psi0)
-            measurer = ShardedMeasurer(state, ex.measurement_frame)
-        else:  # offload
-            from .offload import OffloadedExecutor
-
-            ex = OffloadedExecutor(circuit, plan, dtype=np.dtype(dtype))
-            state = ex.run(psi0, apply_final_remap=False)
-            measurer = StreamingMeasurer(state, ex.measurement_frame)
+        backend_kw = {"mesh": mesh} if backend == "pjit" else {}
+        ex = ExecutionEngine(
+            circuit, plan, backend=backend,
+            dtype=np.dtype(dtype) if backend == "offload" else dtype,
+            use_pallas=use_pallas, **backend_kw,
+        )
+        measurer = measurer_for(ex.run_packed(psi0), ex.measurement_frame)
         meta["n_stages"] = plan.n_stages
     meta["simulate_s"] = time.time() - t0
 
@@ -751,3 +744,38 @@ def simulate_and_measure(
     meta["measure_s"] = time.time() - t0
     result.meta = meta
     return result
+
+
+def measure_batch(
+    engine,
+    psi0s,
+    *,
+    shots: int = 0,
+    seed: int = 0,
+    marginals: Sequence[Sequence[int]] = (),
+    observables: Union[str, PauliSum, Sequence] = (),
+) -> List[SimulationResult]:
+    """Run a batch of initial states through an
+    :class:`repro.sim.engine.ExecutionEngine` and measure every element.
+
+    The batch executes through the backend's fused batch path
+    (``run_batch(..., apply_final=False)`` — states stay in the final stage's
+    physical layout, never re-permuted), then each element is measured in the
+    shared :class:`Frame`. Element ``b`` samples with ``seed + b`` so shot
+    streams are independent but reproducible.
+    """
+    states = engine.run_batch(psi0s, apply_final=False)
+    frame = engine.measurement_frame
+    results: List[SimulationResult] = []
+    for b in range(len(psi0s)):
+        state = states[b]
+        if isinstance(states, np.ndarray):
+            state = np.ascontiguousarray(state)
+        res = measure_to_result(
+            measurer_for(state, frame), backend=engine.backend.name,
+            shots=shots, seed=seed + b, marginals=marginals,
+            observables=observables,
+        )
+        res.meta = {"batch_index": b, "batch_size": len(psi0s)}
+        results.append(res)
+    return results

@@ -1,11 +1,17 @@
-"""Host-memory offloaded execution (paper §VII-C, QDAO comparison).
+"""Host-memory offloaded execution (paper §VII-C, QDAO comparison) —
+compatibility shim.
 
-The state vector lives in host DRAM as ``2^(R+G)`` shards of ``2^L`` amplitudes
-(the TPU analogue of Atlas's Legion-mapped DRAM residency). Each stage streams
-every shard through the accelerator once: dep-batched tensors are resolved to
-concrete per-shard slices on the host, so the device executes exactly the same
-collective-free kernel sequence as the distributed executor. Inter-stage
-remaps are host-side bit permutations (numpy transpose).
+The streaming stage loop, shard-function jit cache and host-side remaps now
+live in :mod:`repro.sim.engine` (:class:`ExecutionEngine` +
+:class:`HostOffloadBackend`); this module keeps the historical entry points
+alive.
+
+The state vector lives in host DRAM as ``2^(R+G)`` shards of ``2^L``
+amplitudes (the TPU analogue of Atlas's Legion-mapped DRAM residency). Each
+stage streams every shard through the accelerator once: dep-batched tensors
+are resolved to concrete per-shard slices on the host, so the device executes
+exactly the same collective-free kernel sequence as the distributed executor.
+Inter-stage remaps are host-side bit permutations (numpy transpose).
 
 Because a stage touches each shard exactly once, total PCIe/host traffic per
 stage is one read+write pass over the full state — the property that makes
@@ -15,130 +21,33 @@ longer multiplies host traffic; stage count does.
 
 from __future__ import annotations
 
-from functools import lru_cache
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import numpy as np
 
 from ..core.circuit import Circuit
 from ..core.partition import SimulationPlan
-from .compile import CompiledCircuit, Op, RemapSpec, compile_plan
-
-
-def _np_remap(state: np.ndarray, spec: RemapSpec, n: int) -> np.ndarray:
-    full = state.reshape((2,) * n)
-    for p in spec.flip_bits:
-        full = np.flip(full, axis=n - 1 - p)
-    perm = [n - 1 - spec.src_bit_of[n - 1 - i] for i in range(n)]
-    full = np.transpose(full, perm)
-    return np.ascontiguousarray(full).reshape(-1)
-
-
-def _op_sig(ops) -> Tuple:
-    """Hashable structural signature of an op list ('shm' nests its members);
-    the jitted shard function is cached per signature."""
-    sig = []
-    for op in ops:
-        if op.kind == "shm":
-            sig.append(("shm", tuple((m.kind, m.local_bits) for m in op.gates)))
-        else:
-            sig.append((op.kind, op.local_bits))
-    return tuple(sig)
-
-
-def _flat_ops(ops) -> List[Op]:
-    """Ops in tensor-argument order: shm groups contribute their members."""
-    flat: List[Op] = []
-    for op in ops:
-        flat.extend(op.gates if op.kind == "shm" else (op,))
-    return flat
-
-
-@lru_cache(maxsize=None)
-def _shard_fn(op_shapes: Tuple, L: int, dtype_str: str):
-    """Jitted per-shard stage function, cached by op signature so all shards
-    (and all stages with the same signature) share one executable."""
-
-    def apply_one(x, kind, local_bits, T):
-        k = len(local_bits)
-        if kind == "scalar":
-            return x * T
-        if kind == "diag":
-            d = T.reshape((2,) * k)
-            shape = [2 if p in local_bits else 1 for p in range(L - 1, -1, -1)]
-            return x * d.reshape(shape)
-        from .apply import apply_matrix
-
-        return apply_matrix(x, T, list(local_bits))
-
-    def fn(shard, *tensors):
-        x = shard.reshape((2,) * L)
-        ti = 0
-        for entry in op_shapes:
-            if entry[0] == "shm":
-                for kind, local_bits in entry[1]:
-                    x = apply_one(x, kind, local_bits, tensors[ti])
-                    ti += 1
-            else:
-                x = apply_one(x, entry[0], entry[1], tensors[ti])
-                ti += 1
-        return x.reshape(-1)
-
-    return jax.jit(fn, donate_argnums=(0,))
+# re-exported for backward compatibility
+from .engine import (  # noqa: F401
+    ExecutionEngine,
+    HostOffloadBackend,
+    JitCache,
+    _np_remap,
+    _op_sig,
+)
 
 
 class OffloadedExecutor:
-    """Streams host-resident shards through the device, stage by stage."""
+    """Streams host-resident shards through the device, stage by stage
+    (shim over ``ExecutionEngine(backend=HostOffloadBackend())``)."""
 
     def __init__(self, circuit: Circuit, plan: SimulationPlan, dtype=np.complex64,
-                 peephole: bool = True):
-        self.circuit = circuit
-        self.plan = plan
-        self.cc: CompiledCircuit = compile_plan(circuit, plan, dtype=np.dtype(dtype),
-                                                peephole=peephole)
-        self.dtype = np.dtype(dtype)
-        self.n, self.L = self.cc.n, self.cc.L
-        self.n_nonlocal = self.cc.R + self.cc.G
-        self.stats = {
-            "shard_transfers": 0,
-            "host_remaps": 0,
-            "tensor_uploads": 0,  # full-tensor H2D uploads (once per op)
-            "tensor_slice_reuse": 0,  # per-shard slices served from device
-            "overlapped_dispatches": 0,  # shard s+1 in flight while s drains
-            "memory_passes": 0,  # device HBM passes (top-level op count)
-        }
-        self._dev_tensors: dict = {}  # id(op) -> full device tensor
-        self._dev_slices: dict = {}  # (id(op), combo) -> device slice
-
-    def _dep_combo(self, op: Op, shard_id: int) -> int:
-        idx = 0
-        for j, p in enumerate(op.dep_bits):
-            bit = (shard_id >> (p - self.L)) & 1
-            idx |= bit << j
-        return idx
-
-    def _resolve(self, op: Op, shard_id: int):
-        """Device tensor slice for this shard (dep bits are known values).
-
-        The full dep-batched tensor is uploaded ONCE per op; per-shard slices
-        are device-side gathers cached by (op, dep-combo) — no per-shard
-        host->device tensor re-upload.
-        """
-        full = self._dev_tensors.get(id(op))
-        if full is None:
-            full = jax.device_put(op.tensor)
-            self._dev_tensors[id(op)] = full
-            self.stats["tensor_uploads"] += 1
-        combo = self._dep_combo(op, shard_id) if op.dep_bits else 0
-        key = (id(op), combo)
-        sl = self._dev_slices.get(key)
-        if sl is None:
-            sl = full[combo]
-            self._dev_slices[key] = sl
-        else:
-            self.stats["tensor_slice_reuse"] += 1
-        return sl
+                 peephole: bool = True, jit_cache_size: int = 64):
+        self.engine = ExecutionEngine(
+            circuit, plan, backend=HostOffloadBackend(jit_cache_size=jit_cache_size),
+            dtype=np.dtype(dtype), peephole=peephole,
+        )
 
     def run(
         self, psi0: Optional[np.ndarray] = None, apply_final_remap: bool = True
@@ -150,58 +59,14 @@ class OffloadedExecutor:
         physical layout (see :attr:`measurement_frame`), which is what
         :mod:`repro.sim.measure`'s streaming measurer consumes — measurement
         then costs one read pass instead of a full permute + read."""
-        n, L = self.n, self.L
-        state = np.zeros(2**n, dtype=self.dtype)
-        if psi0 is None:
-            state[0] = 1.0
-        else:
-            state[:] = np.asarray(psi0, dtype=self.dtype)
-        if self.cc.initial_remap is not None:
-            state = _np_remap(state, self.cc.initial_remap, n)
-            self.stats["host_remaps"] += 1
-        n_shards = 1 << self.n_nonlocal
-        for prog in self.cc.programs:
-            fn = _shard_fn(_op_sig(prog.ops), L, str(self.dtype))
-            flat = _flat_ops(prog.ops)
-            self.stats["memory_passes"] += prog.n_passes
-            # double-buffered streaming: shard s+1 is uploaded and dispatched
-            # BEFORE blocking on shard s's result, so H2D/compute/D2H overlap
-            # (donated ping-pong buffers: fn donates its input shard)
-            pending = None  # (shard_id, in-flight device result)
-            for s in range(n_shards):
-                lo, hi = s << L, (s + 1) << L
-                tensors = [self._resolve(op, s) for op in flat]
-                out = fn(jax.device_put(state[lo:hi]), *tensors)
-                if pending is not None:
-                    ps, pout = pending
-                    state[ps << L:(ps + 1) << L] = np.asarray(pout)
-                    self.stats["overlapped_dispatches"] += 1
-                pending = (s, out)
-                self.stats["shard_transfers"] += 1
-            if pending is not None:
-                ps, pout = pending
-                state[ps << L:(ps + 1) << L] = np.asarray(pout)
-            if prog.remap_after is not None:
-                state = _np_remap(state, prog.remap_after, n)
-                self.stats["host_remaps"] += 1
-        if apply_final_remap and self.cc.final_remap is not None:
-            state = _np_remap(state, self.cc.final_remap, n)
-            self.stats["host_remaps"] += 1
-        return state
+        if apply_final_remap:
+            return self.engine.run(psi0)
+        return self.engine.run_packed(psi0)
 
-    @property
-    def overlap_ratio(self) -> float:
-        """Fraction of shard dispatches issued while the previous shard was
-        still in flight (1 - stages/transfers at best: one drain per stage)."""
-        return self.stats["overlapped_dispatches"] / max(
-            self.stats["shard_transfers"], 1
-        )
-
-    @property
-    def measurement_frame(self):
-        from .measure import Frame
-
-        return Frame.from_compiled(self.cc)
+    def __getattr__(self, name: str):
+        if name == "engine":
+            raise AttributeError(name)
+        return getattr(self.engine, name)
 
 
 class PerGateOffloadExecutor:
@@ -239,6 +104,7 @@ class PerGateOffloadExecutor:
             st.kernels = newk
         # peephole off: the baseline pays one pass per GATE by construction
         ex = OffloadedExecutor(self.circuit, plan, dtype=self.dtype, peephole=False)
+        be: HostOffloadBackend = ex.engine.backend
         # per-gate streaming: each op forces its own pass over all shards
         n_shards = 1 << ex.n_nonlocal
         state = np.zeros(2**n, dtype=self.dtype)
@@ -250,11 +116,10 @@ class PerGateOffloadExecutor:
             state = _np_remap(state, ex.cc.initial_remap, n)
         for prog in ex.cc.programs:
             for op in prog.ops:
-                sig = ((op.kind, op.local_bits),)
-                fn = _shard_fn(sig, ex.L, str(ex.dtype))
+                fn = be.shard_fn(((op.kind, op.local_bits),))
                 for s in range(n_shards):
                     lo, hi = s << ex.L, (s + 1) << ex.L
-                    out = fn(jax.device_put(state[lo:hi]), ex._resolve(op, s))
+                    out = fn(jax.device_put(state[lo:hi]), be.resolve(op, s))
                     state[lo:hi] = np.asarray(out)
                     self.stats["shard_transfers"] += 1
             if prog.remap_after is not None:

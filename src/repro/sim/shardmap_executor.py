@@ -1,10 +1,14 @@
 """Explicit-collective distributed executor (shard_map path — the production
-engine).
+engine) — compatibility shim.
+
+The stage loop, per-device op dispatch and the remap choreography now live in
+:mod:`repro.sim.engine` (:class:`ExecutionEngine` + :class:`ShardMapBackend`);
+this module keeps the historical entry point alive.
 
 The pjit/GSPMD path (:mod:`repro.sim.executor`) is correct but lets the
 compiler infer the inter-stage resharding, which degenerates to all-gathers
-(full rematerialization) for bit-level permutations. This executor instead
-emits the paper's communication choreography explicitly:
+(full rematerialization) for bit-level permutations. The shard_map backend
+instead emits the paper's communication choreography explicitly:
 
 * the device grid is a **bit-mesh**: one named mesh axis per non-local
   physical qubit (`b{p}`), built over the same device order as the production
@@ -26,119 +30,21 @@ emits the paper's communication choreography explicitly:
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import List, Optional, Sequence, Tuple
-
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 from ..core.circuit import Circuit
 from ..core.partition import SimulationPlan
-from .compile import CompiledCircuit, Op, RemapSpec, StageProgram, compile_plan
-
-
-@dataclass
-class RemapPlan:
-    """Host-precomputed choreography for one inter-stage remap."""
-
-    local_flip_axes: Tuple[int, ...]  # view axes to flip (old local pending flips)
-    pre_perm: Tuple[int, ...]  # local transpose before a2a (view axes)
-    a2a_axes: Tuple[str, ...]  # mesh axis names (desc bit order), may be empty
-    m: int
-    ppermute: Optional[Tuple[Tuple[int, int], ...]]  # full-group (src, dst) pairs
-    post_flip_axes: Tuple[int, ...]  # chunk axes to flip after a2a (flipped
-    # old nonlocal bits that moved into the local tier)
-    post_perm: Tuple[int, ...]  # local transpose after a2a (view axes)
-
-
-def _build_remap_plan(spec: RemapSpec, n: int, L: int) -> RemapPlan:
-    src = spec.src_bit_of
-    flips = set(spec.flip_bits)
-    nonlocal_bits = list(range(L, n))
-
-    s_out = sorted({src[p] for p in nonlocal_bits if src[p] < L}, reverse=True)
-    s_in = sorted({src[p] for p in range(L) if src[p] >= L}, reverse=True)
-    m = len(s_out)
-    assert len(s_in) == m, "local<->nonlocal exchange must be balanced"
-
-    # --- step A: local flips (old local bits with pending flips)
-    local_flip_axes = tuple(L - 1 - s for s in sorted(flips) if s < L)
-
-    # --- step B: pre-transpose: [S_out desc..., remaining local desc...]
-    remaining = [b for b in range(L - 1, -1, -1) if b not in s_out]
-    pre_order_bits = list(s_out) + remaining  # bit ids, new axis order
-    pre_perm = tuple(L - 1 - b for b in pre_order_bits)
-
-    # --- step C/D: after a2a, device bit s_in[t] holds old local bit s_out[t];
-    # local chunk bit (m-1-t) holds old nonlocal bit s_in[t].
-    holder = {s: s for s in nonlocal_bits if s not in s_in}
-    for t in range(m):
-        holder[("chunk", t)] = s_in[t]  # local chunk slot t holds old bit s_in[t]
-        holder[s_in[t]] = s_out[t]  # device axis s_in[t] now holds old local bit
-
-    # ppermute: new device bit p must hold old bit src[p]
-    cur_of = {}  # old bit -> device bit currently holding it
-    for s in nonlocal_bits:
-        cur_of[holder[s]] = s
-    need = True
-    perm_map = {}  # for each device bit position p: source device bit h
-    flip_out = set()
-    for p in nonlocal_bits:
-        h = cur_of[src[p]]
-        perm_map[p] = h
-        if src[p] in flips and src[p] >= L:
-            flip_out.add(p)
-    # flips on old nonlocal bits that move INTO the local tier: apply after
-    # the a2a, when the bit has become local chunk axis t (free local flip).
-    post_flip_axes = tuple(t for t in range(m) if s_in[t] in flips)
-
-    identity = all(perm_map[p] == p for p in nonlocal_bits) and not flip_out
-    pairs: Optional[Tuple[Tuple[int, int], ...]] = None
-    if not identity:
-        nb = n - L
-        pair_list = []
-        for d in range(1 << nb):
-            # device rank d: mesh axes desc bit order => rank bit (p-L) is bit p
-            tgt = 0
-            for p in nonlocal_bits:
-                bit = (d >> (perm_map[p] - L)) & 1
-                if p in flip_out:
-                    bit ^= 1
-                tgt |= bit << (p - L)
-            pair_list.append((d, tgt))
-        pairs = tuple(pair_list)
-
-    # --- step E: final local transpose
-    # current local axes (after a2a, viewed as (2,)*L):
-    #   axes 0..m-1   <- old nonlocal bits s_in[0..m-1] (chunk bits desc)
-    #   axes m..L-1   <- `remaining` old local bits (desc order)
-    cur_axis_of_old_bit = {}
-    for t in range(m):
-        cur_axis_of_old_bit[s_in[t]] = t
-    for j, b in enumerate(remaining):
-        cur_axis_of_old_bit[b] = m + j
-    post = []
-    for i in range(L):  # new view axis i <- new local bit L-1-i
-        p = L - 1 - i
-        post.append(cur_axis_of_old_bit[src[p]])
-    return RemapPlan(
-        local_flip_axes=local_flip_axes,
-        pre_perm=pre_perm,
-        a2a_axes=tuple(f"b{s}" for s in s_in),
-        m=m,
-        ppermute=pairs,
-        post_flip_axes=post_flip_axes,
-        post_perm=tuple(post),
-    )
+# re-exported for backward compatibility
+from .engine import (  # noqa: F401
+    ExecutionEngine,
+    RemapPlan,
+    ShardMapBackend,
+    _build_remap_plan,
+)
 
 
 class ShardMapExecutor:
-    """Explicit-collective staged executor."""
+    """Explicit-collective staged executor (shim over ExecutionEngine)."""
 
     def __init__(
         self,
@@ -148,184 +54,12 @@ class ShardMapExecutor:
         dtype=jnp.complex64,
         use_pallas: bool = False,
     ):
-        self.circuit = circuit
-        self.plan = plan
-        self.cc: CompiledCircuit = compile_plan(circuit, plan, dtype=np.dtype(dtype))
-        self.dtype = dtype
-        self.use_pallas = use_pallas
-        n, L, R, G = self.cc.n, self.cc.L, self.cc.R, self.cc.G
-        self.n, self.L, self.R, self.G = n, L, R, G
-        nb = R + G
-        if devices is None:
-            devices = jax.devices()
-        assert len(devices) >= (1 << nb), f"need {1<<nb} devices, have {len(devices)}"
-        devs = np.array(devices[: 1 << nb]).reshape((2,) * nb if nb else (1,))
-        self.axis_names = tuple(f"b{p}" for p in range(n - 1, L - 1, -1)) or ("b_dummy",)
-        self.mesh = Mesh(devs, self.axis_names)
-        self.sharding = NamedSharding(self.mesh, P(self.axis_names if nb else None))
-
-        # precompute remap plans
-        self.remap_plans: List[Optional[RemapPlan]] = []
-        self.initial_plan = (
-            _build_remap_plan(self.cc.initial_remap, n, L)
-            if self.cc.initial_remap is not None
-            else None
-        )
-        for prog in self.cc.programs:
-            self.remap_plans.append(
-                _build_remap_plan(prog.remap_after, n, L)
-                if prog.remap_after is not None
-                else None
-            )
-        self.final_plan = (
-            _build_remap_plan(self.cc.final_remap, n, L)
-            if self.cc.final_remap is not None
-            else None
+        self.engine = ExecutionEngine(
+            circuit, plan, backend=ShardMapBackend(devices=devices),
+            dtype=dtype, use_pallas=use_pallas,
         )
 
-        # hoist op tensors out of the traced body: one device constant per
-        # tensor, shared by every trace (run / run_packed / lower)
-        self._consts = {}
-        for prog in self.cc.programs:
-            for op in prog.ops:
-                for o in (op,) + op.gates:
-                    if o.tensor.size:
-                        self._consts[id(o)] = jnp.asarray(o.tensor, dtype=self.dtype)
-
-        self._fn = self._make_fn(apply_final=True)
-        self._fn_packed = None  # built lazily on first run_packed()
-
-    def _make_fn(self, apply_final: bool):
-        nb = self.R + self.G
-        fn = shard_map(
-            partial(self._device_fn, apply_final=apply_final),
-            mesh=self.mesh,
-            in_specs=P(self.axis_names if nb else None),
-            out_specs=P(self.axis_names if nb else None),
-            check_rep=False,
-        )
-        return jax.jit(fn, donate_argnums=(0,))
-
-    # ----------------------------------------------------------------- ops
-    def _dep_idx(self, op: Op):
-        idx = 0
-        for j, p in enumerate(op.dep_bits):
-            idx = idx + (lax.axis_index(f"b{p}").astype(jnp.int32) << j)
-        return idx
-
-    def _select(self, op: Op):
-        """Per-device tensor slice: dep-batched variant via ``lax.axis_index``."""
-        T = self._consts.get(id(op))
-        if T is None:
-            T = jnp.asarray(op.tensor, dtype=self.dtype)
-        if op.dep_bits and T.shape[0] > 1:
-            return T[self._dep_idx(op)]
-        return T[0]
-
-    def _apply_op(self, view, op: Op):
-        L = self.L
-        if op.kind == "shm":
-            return self._apply_shm(view, op)
-        Tsel = self._select(op)
-        if op.kind == "scalar":
-            return view * Tsel
-        if op.kind == "diag":
-            shape = [2 if p in op.local_bits else 1 for p in range(L - 1, -1, -1)]
-            return view * Tsel.reshape(shape)
-        from .apply import apply_matrix
-
-        if self.use_pallas and len(op.local_bits) >= 1:
-            from ..kernels import ops as kops
-
-            return kops.apply_fused_shard(view, Tsel, op.local_bits)
-        return apply_matrix(view, Tsel, list(op.local_bits))
-
-    def _apply_shm(self, view, op: Op):
-        """One shm group = one memory pass. On the Pallas path the whole
-        member list runs inside a single ``pallas_call``; member matrices are
-        the dep-selected variants, standalone scalar members fold into the
-        first matrix so they never cost an extra pass."""
-        if not self.use_pallas:
-            for m in op.gates:
-                view = self._apply_op(view, m)
-            return view
-        from ..kernels import ops as kops
-
-        gate_list = []
-        scalar_factor = None
-        for m in op.gates:
-            Tsel = self._select(m)
-            if m.kind == "scalar":
-                scalar_factor = Tsel if scalar_factor is None else scalar_factor * Tsel
-            else:
-                # 1-D Tsel = diagonal member, 2-D = unitary member; the kernel
-                # applies diagonals as one VPU elementwise multiply
-                gate_list.append((m.local_bits, Tsel))
-        if scalar_factor is not None:
-            if not gate_list:
-                return view * scalar_factor
-            bits0, mat0 = gate_list[0]
-            gate_list[0] = (bits0, mat0 * scalar_factor)
-        return kops.apply_shm_group(view, gate_list, op.local_bits)
-
-    def _apply_remap(self, view, rp: RemapPlan):
-        L, m = self.L, rp.m
-        for ax in rp.local_flip_axes:
-            view = jnp.flip(view, axis=ax)
-        x = jnp.transpose(view, rp.pre_perm)
-        if m:
-            x = x.reshape((1 << m, 1 << (L - m)))
-            x = lax.all_to_all(x, rp.a2a_axes, split_axis=0, concat_axis=0, tiled=True)
-            # tiled=True keeps dim0 = 2^m (split into 2^m chunks, exchanged,
-            # re-concatenated along the same axis)
-        if rp.ppermute is not None:
-            x = lax.ppermute(x, self.axis_names, perm=list(rp.ppermute))
-        x = x.reshape((2,) * L)
-        for ax in rp.post_flip_axes:
-            x = jnp.flip(x, axis=ax)
-        return jnp.transpose(x, rp.post_perm)
-
-    def _device_fn(self, shard, apply_final: bool = True):
-        L = self.L
-        view = shard.reshape((2,) * L)
-        if self.initial_plan is not None:
-            view = self._apply_remap(view, self.initial_plan)
-        for prog, rp in zip(self.cc.programs, self.remap_plans):
-            for op in prog.ops:
-                view = self._apply_op(view, op)
-            if rp is not None:
-                view = self._apply_remap(view, rp)
-        if apply_final and self.final_plan is not None:
-            view = self._apply_remap(view, self.final_plan)
-        return view.reshape(-1)
-
-    # ----------------------------------------------------------------- api
-    def run(self, psi0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        n = self.n
-        if psi0 is None:
-            psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
-        psi0 = jax.device_put(jnp.asarray(psi0, dtype=self.dtype), self.sharding)
-        return self._fn(psi0)
-
-    def run_packed(self, psi0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        """Run but skip the final remap choreography entirely (no closing
-        all-to-all/ppermute): returns the flat ``[2^n]`` state in the last
-        stage's physical layout, sharded over the bit-mesh. Pair with
-        :attr:`measurement_frame` + :mod:`repro.sim.measure`."""
-        if self._fn_packed is None:
-            self._fn_packed = self._make_fn(apply_final=False)
-        n = self.n
-        if psi0 is None:
-            psi0 = jnp.zeros((2**n,), dtype=self.dtype).at[0].set(1.0)
-        psi0 = jax.device_put(jnp.asarray(psi0, dtype=self.dtype), self.sharding)
-        return self._fn_packed(psi0)
-
-    @property
-    def measurement_frame(self):
-        from .measure import Frame
-
-        return Frame.from_compiled(self.cc)
-
-    def lower(self):
-        shape = jax.ShapeDtypeStruct((1 << self.n,), self.dtype, sharding=self.sharding)
-        return self._fn.lower(shape)
+    def __getattr__(self, name: str):
+        if name == "engine":
+            raise AttributeError(name)
+        return getattr(self.engine, name)
