@@ -12,6 +12,7 @@ Harness -> paper artifact map:
   bench_breakdown  -> Fig. 6 (comm/comp breakdown)
   bench_sampling   -> measurement subsystem (shots/marginals/expectations)
   bench_engine     -> unified engine: compile cache + batched states (serving)
+  bench_param_sweep-> parameterized serving: warm rebind + fused sweeps
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -28,7 +29,7 @@ def main() -> None:
     ap.add_argument(
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "engine,sim_dryrun",
+             "engine,param_sweep,sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -129,6 +130,19 @@ def main() -> None:
         summary.append(("bench_engine", 1e6 * dt / max(len(rows), 1),
                         f"cache_speedup={cache_sp:.1f}x "
                         f"batch_speedup={batch_sp:.2f}x"))
+
+    if "param_sweep" not in skip:
+        section("bench_param_sweep (parameterized serving: rebind + sweeps)")
+        from . import bench_param_sweep
+
+        t0 = time.time()
+        rows = bench_param_sweep.main([])
+        dt = time.time() - t0
+        rebind = min(r["rebind_speedup"] for r in rows)
+        sweep = max(r["sweep_speedup"] for r in rows)
+        summary.append(("bench_param_sweep", 1e6 * dt / max(len(rows), 1),
+                        f"rebind_speedup={rebind:.1f}x "
+                        f"sweep_speedup={sweep:.2f}x"))
 
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")

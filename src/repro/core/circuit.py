@@ -9,20 +9,32 @@ index space; controls occupy the most-significant gate bits, see
 
 from __future__ import annotations
 
+import hashlib
 import json
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
 from . import gates as G
+from .gates import Param, UnboundParameterError
+
+
+def _coerce_param(p) -> "G.ParamValue":
+    if isinstance(p, Param):
+        return p
+    if isinstance(p, str):
+        return Param(p)
+    if isinstance(p, dict):  # JSON form: {"param": name, "scale":, "shift":}
+        return Param(p["param"], float(p.get("scale", 1.0)), float(p.get("shift", 0.0)))
+    return float(p)
 
 
 @dataclass(frozen=True)
 class Gate:
     name: str
     qubits: Tuple[int, ...]  # circuit qubit per gate bit (low -> high)
-    params: Tuple[float, ...] = ()
+    params: Tuple["G.ParamValue", ...] = ()  # floats and/or symbolic Params
     gid: int = -1  # position in the circuit sequence
 
     def __post_init__(self):
@@ -38,13 +50,46 @@ class Gate:
         return G.GATE_DEFS[self.name].n_controls
 
     @property
+    def is_bound(self) -> bool:
+        return not G.is_symbolic(self.params)
+
+    @property
+    def free_params(self) -> Tuple[str, ...]:
+        """Names of unbound symbolic parameters, in slot order."""
+        return tuple(p.name for p in self.params if isinstance(p, Param))
+
+    def bind(self, values: Mapping[str, float]) -> "Gate":
+        if self.is_bound:
+            return self
+        return Gate(
+            self.name,
+            self.qubits,
+            tuple(p.resolve(values) if isinstance(p, Param) else p for p in self.params),
+            gid=self.gid,
+        )
+
+    @property
     def matrix(self) -> np.ndarray:
+        """Concrete unitary; raises :class:`UnboundParameterError` when the
+        gate still carries symbolic params (use :attr:`structural_matrix`
+        for parameter-independent structure analysis)."""
         return G.gate_matrix(self.name, self.params)
 
     @property
+    def structural_matrix(self) -> np.ndarray:
+        """Matrix at generic probe angles — depends on (name) only. All
+        structural predicates (insularity, diagonality, staging/compile
+        classification) go through this so they are identical across
+        parameter bindings."""
+        return G.structural_matrix(self.name)
+
+    @property
     def insular(self) -> Tuple[bool, ...]:
-        """Per-gate-bit insularity mask (paper Def. 2)."""
-        return G.insular_mask(self.matrix, self.n_controls)
+        """Per-gate-bit insularity mask (paper Def. 2). Structural: evaluated
+        at generic probe angles, so it is the same for every binding (special
+        concrete angles can only *shrink* the nonzero pattern, which keeps
+        every insularity classification valid)."""
+        return G.insular_mask(self.structural_matrix, self.n_controls)
 
     @property
     def non_insular_qubits(self) -> Tuple[int, ...]:
@@ -58,10 +103,17 @@ class Gate:
 
     @property
     def is_diagonal(self) -> bool:
-        return G.is_diagonal(self.matrix)
+        """Structurally diagonal (true for every binding)."""
+        return G.is_diagonal(self.structural_matrix)
 
     def to_dict(self) -> dict:
-        return {"name": self.name, "qubits": list(self.qubits), "params": list(self.params)}
+        params = [
+            {"param": p.name, "scale": p.scale, "shift": p.shift}
+            if isinstance(p, Param)
+            else p
+            for p in self.params
+        ]
+        return {"name": self.name, "qubits": list(self.qubits), "params": params}
 
 
 @dataclass
@@ -70,7 +122,9 @@ class Circuit:
     gates: List[Gate] = field(default_factory=list)
 
     # ------------------------------------------------------------------ build
-    def add(self, name: str, *qubits: int, params: Sequence[float] = ()) -> "Circuit":
+    def add(self, name: str, *qubits: int, params: Sequence = ()) -> "Circuit":
+        """Append a gate. ``params`` entries may be floats, :class:`Param`
+        objects, or bare strings (coerced to ``Param(name)``)."""
         gd = G.GATE_DEFS[name]
         if len(qubits) != gd.n_qubits:
             raise ValueError(f"gate {name} expects {gd.n_qubits} qubits, got {len(qubits)}")
@@ -78,9 +132,75 @@ class Circuit:
             if not (0 <= q < self.n_qubits):
                 raise ValueError(f"qubit {q} out of range [0, {self.n_qubits})")
         self.gates.append(
-            Gate(name=name, qubits=tuple(qubits), params=tuple(params), gid=len(self.gates))
+            Gate(name=name, qubits=tuple(qubits),
+                 params=tuple(_coerce_param(p) for p in params), gid=len(self.gates))
         )
         return self
+
+    # ------------------------------------------------------------ parameters
+    @property
+    def is_bound(self) -> bool:
+        return all(g.is_bound for g in self.gates)
+
+    @property
+    def param_names(self) -> Tuple[str, ...]:
+        """Distinct free parameter names, in order of first appearance. This
+        is the canonical ordering of a flat params vector for
+        :meth:`bind` / ``ExecutionEngine.run_sweep``."""
+        seen: List[str] = []
+        for g in self.gates:
+            for nm in g.free_params:
+                if nm not in seen:
+                    seen.append(nm)
+        return tuple(seen)
+
+    def bind(self, params: Union[Mapping[str, float], Sequence[float], None]) -> "Circuit":
+        """Return a new circuit with every symbolic parameter bound.
+
+        ``params`` is a ``{name: value}`` mapping or a flat vector ordered by
+        :attr:`param_names`. Unknown names and missing values raise.
+        """
+        names = self.param_names
+        if params is None:
+            params = {}
+        if not isinstance(params, Mapping):
+            vec = list(np.asarray(params, dtype=np.float64).reshape(-1))
+            if len(vec) != len(names):
+                raise ValueError(
+                    f"flat params vector has {len(vec)} entries; circuit has "
+                    f"{len(names)} free parameters {names}"
+                )
+            params = dict(zip(names, vec))
+        else:
+            unknown = set(params) - set(names)
+            if unknown:
+                raise ValueError(f"unknown parameter names {sorted(unknown)}; "
+                                 f"circuit parameters are {names}")
+        missing = set(names) - set(params)
+        if missing:
+            raise UnboundParameterError(f"missing values for {sorted(missing)}")
+        out = Circuit(self.n_qubits)
+        out.gates = [g.bind(params) for g in self.gates]
+        return out
+
+    def binding_signature(self) -> Tuple:
+        """Hashable fingerprint of the concrete parameter values (and any
+        still-symbolic slots). Two same-structure circuits with equal binding
+        signatures execute identically — used by the serving cache to decide
+        whether a cached engine needs a rebinding pass."""
+        return tuple(
+            (repr(p) if isinstance(p, Param) else float(p))
+            for g in self.gates for p in g.params
+        )
+
+    def structure_fingerprint(self) -> str:
+        """Stable digest of the circuit *structure* — gate names and qubit
+        wiring only, ignoring concrete angles and symbolic parameter names.
+        Everything the Atlas pipeline computes ahead of parameter binding
+        (ILP staging, DP kernelization, stage compilation, XLA executables)
+        is a pure function of this fingerprint plus the compile knobs."""
+        payload = (self.n_qubits, tuple((g.name, g.qubits) for g in self.gates))
+        return hashlib.sha256(repr(payload).encode()).hexdigest()
 
     # ------------------------------------------------------------- structure
     @property

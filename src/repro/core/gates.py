@@ -16,11 +16,88 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, Sequence, Tuple
+from functools import lru_cache
+from typing import Callable, Dict, Mapping, Sequence, Tuple, Union
 
 import numpy as np
 
 SQ2 = 1.0 / math.sqrt(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic parameters (structure/parameter split)
+# ---------------------------------------------------------------------------
+
+
+class UnboundParameterError(ValueError):
+    """Raised when a concrete matrix is requested from a symbolic gate."""
+
+
+@dataclass(frozen=True)
+class Param:
+    """A named symbolic angle: ``scale * value(name) + shift``.
+
+    Accepted wherever a gate angle is. Affine arithmetic keeps the common
+    ansatz forms (``-theta``, ``0.5 * theta``, ``theta + pi/2``) symbolic so
+    the whole circuit stays rebindable from one flat parameter vector.
+    """
+
+    name: str
+    scale: float = 1.0
+    shift: float = 0.0
+
+    def __mul__(self, k: float) -> "Param":
+        return Param(self.name, self.scale * float(k), self.shift * float(k))
+
+    __rmul__ = __mul__
+
+    def __neg__(self) -> "Param":
+        return self * -1.0
+
+    def __add__(self, k: float) -> "Param":
+        return Param(self.name, self.scale, self.shift + float(k))
+
+    __radd__ = __add__
+
+    def __sub__(self, k: float) -> "Param":
+        return self + (-float(k))
+
+    def __rsub__(self, k: float) -> "Param":
+        return (-self) + float(k)
+
+    def resolve(self, values: Mapping[str, float]) -> float:
+        if self.name not in values:
+            raise UnboundParameterError(f"no value bound for parameter {self.name!r}")
+        return self.scale * float(values[self.name]) + self.shift
+
+    def __repr__(self) -> str:  # compact, stable (used in fingerprints/errors)
+        body = self.name
+        if self.scale != 1.0:
+            body = f"{self.scale:g}*{body}"
+        if self.shift != 0.0:
+            body = f"{body}{self.shift:+g}"
+        return f"Param({body})"
+
+
+ParamValue = Union[float, Param]
+
+
+def is_symbolic(params: Sequence[ParamValue]) -> bool:
+    return any(isinstance(p, Param) for p in params)
+
+
+# Generic probe angles for structural analysis of parametric gates: the
+# pipeline's structural predicates (insularity, diagonality, flip schedules)
+# must not depend on concrete angles, so they are evaluated at fixed generic
+# (irrational, non-special) values. Entries that vanish at a *special* angle
+# (e.g. rz(0) = I) are still non-zero at the probe, so the probe nonzero
+# pattern is a superset of every binding's pattern — structural
+# classifications computed here stay valid for all bindings.
+PROBE_ANGLES = (
+    0.9 * math.sqrt(2.0),  # ~1.27279
+    1.1 * math.sqrt(3.0),  # ~1.90526
+    0.8 * math.sqrt(5.0),  # ~1.78885
+)
 
 # ---------------------------------------------------------------------------
 # Base 1q matrices
@@ -225,8 +302,27 @@ GATE_DEFS: Dict[str, GateDef] = {
 }
 
 
-def gate_matrix(name: str, params: Sequence[float] = ()) -> np.ndarray:
+def gate_matrix(name: str, params: Sequence[ParamValue] = ()) -> np.ndarray:
     gd = GATE_DEFS[name]
     if len(params) != gd.n_params:
         raise ValueError(f"gate {name} expects {gd.n_params} params, got {len(params)}")
+    if is_symbolic(params):
+        raise UnboundParameterError(
+            f"gate {name} has unbound symbolic params {tuple(params)}; "
+            "bind the circuit (Circuit.bind) before requesting matrices"
+        )
     return gd.fn(*params)
+
+
+@lru_cache(maxsize=None)
+def structural_matrix(name: str) -> np.ndarray:
+    """The gate's matrix at generic :data:`PROBE_ANGLES` — parameter-free.
+
+    Every structural predicate of the compile pipeline (insularity, diagonal
+    detection, lazy-flip schedules, kernel costing) evaluates gates through
+    this, so staging/kernelization/compilation decisions are identical for
+    every binding of the same circuit structure. For non-parametric gates this
+    is the concrete matrix.
+    """
+    gd = GATE_DEFS[name]
+    return gd.fn(*PROBE_ANGLES[: gd.n_params])

@@ -13,6 +13,7 @@ from typing import Callable, Dict, List
 import numpy as np
 
 from .circuit import Circuit
+from .gates import Param
 
 
 def ghz(n: int) -> Circuit:
@@ -230,6 +231,43 @@ def hhl(n_problem: int, n_total: int = 28) -> Circuit:
     return c
 
 
+def su2param(n: int, reps: int = 3) -> Circuit:
+    """Symbolic su2random: the same structure as :func:`su2random` but every
+    rotation angle is a free :class:`Param` (``r{layer}_{q}`` names). This is
+    the canonical parameterized-serving workload — one structural compile,
+    many bindings (VQE/QSVM-style sweeps)."""
+    c = Circuit(n)
+
+    def rot_layer(tag: str):
+        for q in range(n):
+            c.add("ry", q, params=[Param(f"ry{tag}_{q}")])
+        for q in range(n):
+            c.add("rz", q, params=[Param(f"rz{tag}_{q}")])
+
+    rot_layer("0")
+    for _ in range(reps):
+        for i in range(n):
+            for j in range(i + 1, n):
+                c.add("cx", j, i)
+    rot_layer("1")
+    return c
+
+
+def ising_param(n: int, steps: int = 2) -> Circuit:
+    """Symbolic Trotterized Ising: shared ``J`` (coupling) and ``h`` (field)
+    parameters across all layers — exercises parameter *sharing* (one name
+    bound into many gates) through the rebinding pass."""
+    c = Circuit(n)
+    for q in range(n):
+        c.add("h", q)
+    for _ in range(steps):
+        for q in range(n - 1):
+            c.add("rzz", q, q + 1, params=[Param("J")])
+        for q in range(n):
+            c.add("rx", q, params=[Param("h")])
+    return c
+
+
 def random_circuit(n: int, n_gates: int, seed: int = 0, two_qubit_frac: float = 0.45) -> Circuit:
     """Random circuit for property tests."""
     rng = np.random.default_rng(seed)
@@ -251,6 +289,14 @@ def random_circuit(n: int, n_gates: int, seed: int = 0, two_qubit_frac: float = 
         c.add(name, *qs, params=params)
     return c
 
+
+# Symbolic (parameterized) families: excluded from FAMILIES so the
+# whole-family benchmark sweeps stay value-executable without binding; the
+# launch driver exposes them behind --bind/--sweep.
+PARAM_FAMILIES: Dict[str, Callable[[int], Circuit]] = {
+    "su2param": su2param,
+    "isingparam": ising_param,
+}
 
 FAMILIES: Dict[str, Callable[[int], Circuit]] = {
     "ghz": ghz,

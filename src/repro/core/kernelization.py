@@ -24,6 +24,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from .circuit import Circuit, Gate
 from .cost_model import FUSION, SHM, CostModel, DEFAULT_COST_MODEL
 
+# DP-solve accounting (see repro.core.staging.SOLVER_CALLS): the parametric
+# serving path asserts rebinding performs zero new kernelization solves.
+SOLVER_CALLS: Dict[str, int] = {"dp": 0}
+
 
 @dataclass(frozen=True)
 class Item:
@@ -178,6 +182,7 @@ def kernelize(
     cm: CostModel = DEFAULT_COST_MODEL,
     prune_T: int = 500,
 ) -> KernelizationResult:
+    SOLVER_CALLS["dp"] += 1
     FULL = (1 << n_qubits) - 1
     io_mask = (1 << cm.io_qubits) - 1
 

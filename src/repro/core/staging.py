@@ -25,6 +25,11 @@ from scipy.optimize import Bounds, LinearConstraint, milp
 
 from .circuit import Circuit, Gate
 
+# Module-level solver-call accounting. The parametric serving path asserts
+# that rebinding a cached engine performs ZERO new solves; tests snapshot and
+# diff these counters around rebind + run.
+SOLVER_CALLS: Dict[str, int] = {"ilp": 0, "greedy": 0}
+
 
 @dataclass(frozen=True)
 class QubitPartition:
@@ -373,6 +378,7 @@ def stage_ilp(
     (minimum #stages by Thm. 1 — the chain lower bound only skips provably
     infeasible s — min Eq. 2 cost among those)."""
     t0 = time.time()
+    SOLVER_CALLS["ilp"] += 1
     s_lo = stage_count_lower_bound(circuit, L)
     # Alg. 2: scan s upward from the chain lower bound. Probes are
     # feasibility-only (zero objective => the MIP stops at its first
@@ -416,6 +422,7 @@ def stage_greedy(circuit: Circuit, L: int, R: int, G: int, c: float = 3.0) -> St
     gate references as local (total gate count as tiebreaker), execute the
     maximal dependency-closed prefix, repeat."""
     t0 = time.time()
+    SOLVER_CALLS["greedy"] += 1
     n = circuit.n_qubits
     remaining: List[Gate] = list(circuit.gates)
     stages: List[Stage] = []

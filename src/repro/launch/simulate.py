@@ -15,17 +15,27 @@ backend gathers the 2^n probability vector to one device):
 Unified engine (serving path: compile cache + batched initial states):
   PYTHONPATH=src python -m repro.launch.simulate --circuit qft --n 18 \
       --L 15 --R 3 --executor offload --engine --batch 4 --shots 256
+
+Parameterized circuits (structure/parameter split — the compile cache is
+structural, so rebinding angles never re-runs ILP/DP/XLA):
+  PYTHONPATH=src python -m repro.launch.simulate --circuit isingparam --n 12 \
+      --L 10 --R 2 --engine --bind J=0.35 --bind h=0.8 --check
+  PYTHONPATH=src python -m repro.launch.simulate --circuit su2param --n 10 \
+      --L 10 --sweep points.json --check
+(points.json: a JSON list of {name: value} objects, or {"name": [v0, v1, ...]}
+columns of equal length.)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
-from ..core.generators import FAMILIES
+from ..core.generators import FAMILIES, PARAM_FAMILIES
 from ..core.partition import partition
 from ..sim.statevector import fidelity, simulate
 
@@ -39,9 +49,36 @@ def _pjit_mesh(R: int, G: int):
     return None
 
 
+def _parse_bind(specs):
+    out = {}
+    for spec in specs:
+        if "=" not in spec:
+            raise SystemExit(f"--bind expects name=value, got {spec!r}")
+        name, _, val = spec.partition("=")
+        out[name.strip()] = float(val)
+    return out
+
+
+def _load_sweep(path):
+    """JSON sweep file -> list of {name: value} points."""
+    with open(path) as f:
+        d = json.load(f)
+    if isinstance(d, dict) and "points" in d:
+        d = d["points"]
+    if isinstance(d, list):
+        return [dict(p) for p in d]
+    # columns form: {name: [v0, v1, ...]}
+    lengths = {len(v) for v in d.values()}
+    if len(lengths) != 1:
+        raise SystemExit("--sweep columns must have equal length")
+    P = lengths.pop()
+    return [{k: float(v[p]) for k, v in d.items()} for p in range(P)]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--circuit", default="qft", choices=sorted(FAMILIES))
+    ap.add_argument("--circuit", default="qft",
+                    choices=sorted(FAMILIES) + sorted(PARAM_FAMILIES))
     ap.add_argument("--n", type=int, default=16)
     ap.add_argument("--L", type=int, default=0, help="local qubits (0: n-R-G)")
     ap.add_argument("--R", type=int, default=0)
@@ -64,18 +101,32 @@ def main(argv=None):
                     help="comma-separated qubit subset (repeatable)")
     ap.add_argument("--observable", action="append", default=[],
                     help='Pauli sum, e.g. "Z0 Z1 + 0.5*X2" (repeatable)')
+    ap.add_argument("--bind", action="append", default=[], metavar="NAME=VAL",
+                    help="bind one circuit parameter (repeatable); required "
+                         "for parameterized families unless --sweep is given")
+    ap.add_argument("--sweep", default=None, metavar="FILE.json",
+                    help="run a parameter sweep: every point reuses ONE "
+                         "structural compile (implies --engine)")
     args = ap.parse_args(argv)
 
     n = args.n
     L = args.L or (n - args.R - args.G)
-    circ = FAMILIES[args.circuit](n)
-    print(f"{args.circuit}(n={n}): {circ.n_gates} gates; L/R/G = {L}/{args.R}/{args.G}")
+    circ = (FAMILIES.get(args.circuit) or PARAM_FAMILIES[args.circuit])(n)
+    print(f"{args.circuit}(n={n}): {circ.n_gates} gates; L/R/G = {L}/{args.R}/{args.G}"
+          + (f"; {len(circ.param_names)} free params" if not circ.is_bound else ""))
 
     measuring = bool(args.shots or args.marginal or args.observable)
     marginals = [tuple(int(q) for q in spec.split(",")) for spec in args.marginal]
-    use_engine = args.engine or args.batch > 1 or args.executor == "dense"
+    binds = _parse_bind(args.bind)
+    use_engine = (args.engine or args.batch > 1 or args.executor == "dense"
+                  or args.sweep is not None)
     if use_engine and args.executor == "pergate":
-        ap.error("--engine/--batch do not support the pergate baseline")
+        ap.error("--engine/--batch/--sweep do not support the pergate baseline")
+    if not use_engine and (binds or not circ.is_bound):
+        # legacy executor path: bind eagerly (the engine path binds lazily so
+        # the structural compile cache stays parameter-blind)
+        circ = circ.bind(binds)
+        binds = {}
 
     if use_engine:
         from ..sim.engine import DEFAULT_CACHE, engine_for
@@ -92,6 +143,14 @@ def main(argv=None):
         print(f"engine[{ex.backend.name}] ready in {time.time() - t0:.2f}s; "
               f"cache: {len(DEFAULT_CACHE)} entries, {DEFAULT_CACHE.hits} hits"
               f"/{DEFAULT_CACHE.misses} misses")
+        if binds:
+            t0 = time.time()
+            ex.bind(binds)
+            print(f"bound {len(binds)} params in {time.time() - t0:.3f}s "
+                  "(tensor swap: no ILP/DP/XLA)")
+        elif not circ.is_bound and args.sweep is None:
+            ap.error(f"circuit has free parameters {circ.param_names}; "
+                     "pass --bind NAME=VAL or --sweep FILE.json")
     else:
         t0 = time.time()
         plan = partition(circ, L, args.R, args.G,
@@ -99,6 +158,40 @@ def main(argv=None):
                          kernelize_method=args.kernelizer)
     print(f"partition: {plan.n_stages} stages, kernel cost {plan.total_kernel_cost:,.0f} us"
           f" (preprocess {plan.preprocess_time_s:.2f}s)")
+
+    # ----------------------------------------------------- parameter sweep
+    if args.sweep is not None:
+        points = _load_sweep(args.sweep)
+        P = len(points)
+        t0 = time.time()
+        if measuring:
+            from ..sim.measure import measure_sweep
+
+            results = measure_sweep(ex, points, shots=args.shots,
+                                    seed=args.seed, marginals=marginals,
+                                    observables=args.observable)
+            dt = time.time() - t0
+            print(f"sweep of {P} bindings simulated+measured in {dt:.3f}s "
+                  f"({dt / P:.3f}s/point)")
+            for p, res in enumerate(results):
+                bits = []
+                if args.shots:
+                    bits.append("top " + ", ".join(
+                        f"{s}:{c_}" for s, c_ in res.top(3)))
+                bits += [f"<{k}>={v:+.4f}" for k, v in res.expectations.items()]
+                print(f"  [{p}] " + "; ".join(bits))
+            return results
+        out = ex.run_sweep(None, points)
+        out = jax.block_until_ready(out) if not isinstance(out, np.ndarray) else out
+        dt = time.time() - t0
+        print(f"sweep of {P} bindings in {dt:.3f}s ({dt / P:.3f}s/point, "
+              f"one structural compile)")
+        if args.check and n <= 24:
+            for p, pt in enumerate(points):
+                ref = simulate(circ.bind(pt))
+                print(f"  fidelity[{p}] vs dense reference: "
+                      f"{fidelity(np.asarray(out[p]), ref):.6f}")
+        return out
 
     # --------------------------------------------------- batched serving path
     if args.batch > 1:
@@ -199,7 +292,7 @@ def main(argv=None):
             # final remap applied for the logical-order fidelity check
             out = ex.run() if args.executor != "pergate" else out
             out = np.asarray(jax.block_until_ready(out)) if not isinstance(out, np.ndarray) else out
-        ref = simulate(circ)
+        ref = simulate(circ if circ.is_bound else ex.bound_circuit)
         print(f"fidelity vs dense reference: {fidelity(out, ref):.6f}")
     return out
 

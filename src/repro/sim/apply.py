@@ -91,6 +91,7 @@ def specialize_gate(
     mat: np.ndarray,
     nonlocal_bits: Sequence[int],
     values: Sequence[int],
+    classify: np.ndarray = None,
 ) -> Tuple[np.ndarray, Tuple[int, ...]]:
     """Restrict a gate matrix on its non-local index bits.
 
@@ -99,11 +100,21 @@ def specialize_gate(
     * antidiag-in-j  -> keep entries with c_j == v, r_j == 1-v, and report the
       bit as *flipped* (the caller toggles its lazy flip state).
 
+    ``classify`` (optional) supplies the nonzero pattern used for the
+    diagonal/antidiagonal branch decisions while entry *values* still come
+    from ``mat``. The parametric compile pipeline passes the gate's
+    structural (generic-probe) matrix here so that specialization takes the
+    same branches — and reports the same flips — for every binding, even at
+    special angles where ``mat`` entries vanish (the probe pattern is a
+    superset of every binding's pattern, so extra positions only contribute
+    zeros to the reduced matrix).
+
     Returns (reduced matrix over the remaining bits in ascending original
     order, tuple of flipped non-local bit positions).
     """
     k = int(round(np.log2(mat.shape[0])))
-    rows, cols = np.nonzero(np.abs(mat) > 1e-14)
+    pattern = mat if classify is None else classify
+    rows, cols = np.nonzero(np.abs(pattern) > 1e-14)
     flipped = []
     keep = np.ones(len(rows), dtype=bool)
     for j, v in zip(nonlocal_bits, values):

@@ -26,10 +26,24 @@ import numpy as np
 
 from ..core.circuit import Circuit, Gate
 from ..core.cost_model import FUSION, SHM
+from ..core.gates import UnboundParameterError
 from ..core.partition import SimulationPlan
 from .apply import embed_matrix, gather_bits, specialize_gate
 
 INSULAR_KIND = 2  # kernel.kind for zero-footprint bookkeeping kernels
+
+
+def _value_matrix(g: Gate) -> np.ndarray:
+    """Matrix supplying tensor VALUES: the bound matrix for concrete
+    parametric gates, the structural (probe) matrix otherwise. All
+    *classification* decisions use ``g.structural_matrix`` regardless, so the
+    emitted op stream (kinds, bits, shapes, flips, uids) is identical for
+    every binding of one structure — only the tensor values differ. An
+    unbound circuit compiles with probe-value placeholder tensors
+    (``CompiledCircuit.needs_binding``)."""
+    if not g.params or not g.is_bound:
+        return g.structural_matrix
+    return g.matrix
 
 
 @dataclass
@@ -105,6 +119,8 @@ class CompiledCircuit:
     initial_remap: Optional[RemapSpec]  # identity layout -> stage-0 layout
     final_remap: Optional[RemapSpec]  # last layout (+pending flips) -> identity
     dtype: np.dtype = np.complex64
+    needs_binding: bool = False  # True: tensors are probe placeholders (the
+    # circuit had unbound symbolic params); bind before executing
 
     @property
     def total_passes(self) -> int:
@@ -129,8 +145,14 @@ def _remap_spec(
 
 def compile_plan(
     circuit: Circuit, plan: SimulationPlan, dtype=np.complex64,
-    peephole: bool = True,
+    peephole: bool = True, struct_cache: Optional[Dict] = None,
 ) -> CompiledCircuit:
+    """``struct_cache`` (optional, engine-owned, persists across parameter
+    rebindings of ONE structure+plan): memoizes every binding-independent
+    artifact of the op build — structural classifications (diag/fused/drop),
+    per-combo variant indices, and constant gates' embedded matrix stacks —
+    so a rebinding pass only re-specializes the parametric gates and redoes
+    the value matmuls, in the same order (bit-identical results)."""
     n, L = plan.n_qubits, plan.L
     programs: List[StageProgram] = []
     flips: Dict[int, int] = {}  # logical qubit -> pending lazy flip (non-local only)
@@ -148,9 +170,9 @@ def compile_plan(
             nl_bits = [j for j, q in enumerate(g.qubits) if phys_of[q] >= L]
             if nl_bits:
                 # structural flip detection: which non-local matrix bits are
-                # anti-diagonal (combo-independent)
+                # anti-diagonal (combo- and binding-independent)
                 _, flipped = specialize_gate(
-                    g.matrix, nl_bits, [0] * len(nl_bits)
+                    g.structural_matrix, nl_bits, [0] * len(nl_bits)
                 )
                 for j in flipped:
                     q = g.qubits[j]
@@ -163,13 +185,13 @@ def compile_plan(
             gids = sorted(kern.gate_ids)
             if kern.kind == FUSION:
                 built = _build_fused(circuit, gids, kern.qubits, phys_of, L,
-                                     flip_before, dtype)
+                                     flip_before, dtype, struct_cache)
                 ops.extend(built)
             elif kern.kind == SHM:
                 members: List[Op] = []
                 for gid in gids:
                     members.extend(_build_fused(circuit, [gid], None, phys_of, L,
-                                                flip_before, dtype))
+                                                flip_before, dtype, struct_cache))
                 if peephole:
                     members = _peephole(members, dtype)
                 if len(members) <= 1 or all(m.kind == "scalar" for m in members):
@@ -187,7 +209,8 @@ def compile_plan(
                     ))
             else:  # INSULAR_KIND: zero-footprint gates -> scalars (flips done)
                 for gid in gids:
-                    op = _build_scalar(circuit, gid, phys_of, L, flip_before, dtype)
+                    op = _build_scalar(circuit, gid, phys_of, L, flip_before,
+                                       dtype, struct_cache)
                     if op is not None:
                         ops.append(op)
         if peephole:
@@ -222,6 +245,7 @@ def compile_plan(
     return CompiledCircuit(
         n=n, L=L, R=plan.R, G=plan.G, programs=programs,
         initial_remap=initial, final_remap=final, dtype=np.dtype(dtype),
+        needs_binding=not circuit.is_bound,
     )
 
 
@@ -229,6 +253,24 @@ def _gate_bit_split(g: Gate, phys_of: Dict[int, int], L: int):
     loc = [(j, phys_of[g.qubits[j]]) for j in range(g.n_qubits) if phys_of[g.qubits[j]] < L]
     nl = [(j, phys_of[g.qubits[j]]) for j in range(g.n_qubits) if phys_of[g.qubits[j]] >= L]
     return loc, nl
+
+
+def _gate_variants(g: Gate, nl_idx: Sequence[int]) -> List[np.ndarray]:
+    """Bound-value specializations of one gate over its non-local bits,
+    branch-classified by the structural matrix."""
+    sm = g.structural_matrix
+    bm = _value_matrix(g)
+    nv = len(nl_idx)
+    if bm is sm:
+        return [
+            specialize_gate(sm, nl_idx, [(v >> jj) & 1 for jj in range(nv)])[0]
+            for v in range(1 << nv)
+        ]
+    return [
+        specialize_gate(bm, nl_idx, [(v >> jj) & 1 for jj in range(nv)],
+                        classify=sm)[0]
+        for v in range(1 << nv)
+    ]
 
 
 def _build_fused(
@@ -239,6 +281,7 @@ def _build_fused(
     L: int,
     flip_before: Dict[int, Dict[int, int]],
     dtype,
+    struct_cache: Optional[Dict] = None,
 ) -> List[Op]:
     """Build the dep-batched fused tensor for one fusion kernel (or a single
     gate when ``gids`` has one element). Splits the kernel if the dep set is
@@ -260,7 +303,8 @@ def _build_fused(
         # fully non-local kernel (can happen for 1-gate builds)
         out = []
         for gid in gids:
-            op = _build_scalar(circuit, gid, phys_of, L, flip_before, dtype)
+            op = _build_scalar(circuit, gid, phys_of, L, flip_before, dtype,
+                               struct_cache)
             if op is not None:
                 out.append(op)
         return out
@@ -268,18 +312,54 @@ def _build_fused(
         # too many dep combos: apply member gates individually
         out = []
         for gid in gids:
-            out.extend(_build_fused(circuit, [gid], None, phys_of, L, flip_before, dtype))
+            out.extend(_build_fused(circuit, [gid], None, phys_of, L,
+                                    flip_before, dtype, struct_cache))
         return out
     dep_pos = {p: i for i, p in enumerate(dep)}
+
+    ckey = ("f", tuple(gids))
+    cached = None if struct_cache is None else struct_cache.get(ckey)
+    if cached is not None:
+        # rebinding fast path: every binding-independent artifact (variant
+        # indices, constant gates' embedded stacks, the diag/fused kind) is
+        # memoized — only parametric gates re-specialize, and the value
+        # matmuls run in the SAME order as the slow path (bit-identical)
+        T = np.broadcast_to(np.eye(1 << k, dtype=np.complex128),
+                            (1 << d, 1 << k, 1 << k)).copy()
+        scal = np.ones(1 << d, dtype=np.complex128)
+        for gid, vg, nl_idx, positions, E_const in cached["per_gate"]:
+            if E_const is not None:
+                T = np.matmul(E_const[vg], T)
+                continue
+            variants = _gate_variants(circuit.gates[gid], nl_idx)
+            if positions is None:  # zero local footprint: scalar factor
+                scal *= np.array([m[0, 0] for m in variants])[vg]
+            else:
+                E = np.stack([embed_matrix(m, positions, k) for m in variants])
+                T = np.matmul(E[vg], T)
+        T *= scal[:, None, None]
+        if cached["kind"] == "diag":
+            diag = np.ascontiguousarray(np.einsum("dii->di", T)).astype(dtype)
+            return [Op("diag", tuple(kq), tuple(dep), diag, tuple(gids))]
+        return [Op("fused", tuple(kq), tuple(dep), T.astype(dtype), tuple(gids))]
 
     # Batched build over all dep combos: each gate is specialized once per
     # combination of ITS OWN non-local bits (2^d_g variants, not 2^d), the
     # variants are gathered per-combo with index arithmetic, and the product
-    # over gates is one batched matmul per gate.
+    # over gates is one batched matmul per gate. The product is built twice
+    # when the kernel contains parametric gates: T carries the bound VALUES,
+    # Ts the structural (generic-probe) values — the diagonal-vs-fused
+    # classification runs on Ts so the op kind is the same for every binding
+    # (structurally-diagonal products stay numerically diagonal at all
+    # bindings; the converse coincidence at special angles is ignored).
     combos = np.arange(1 << d)
     T = np.broadcast_to(np.eye(1 << k, dtype=np.complex128),
                         (1 << d, 1 << k, 1 << k)).copy()
+    Ts = T.copy()
     scal = np.ones(1 << d, dtype=np.complex128)
+    scal_s = np.ones(1 << d, dtype=np.complex128)
+    parametric = False
+    per_gate = []  # (gid, vg, nl_idx, positions|None, E_const|None)
     for g, gid in zip(gates, gids):
         loc, nl = _gate_bit_split(g, phys_of, L)
         fb = flip_before[gid]
@@ -289,20 +369,51 @@ def _build_fused(
             bit = ((combos >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0)
             vg |= bit << jj
         nl_idx = [j for j, _ in nl]
-        variants = [
-            specialize_gate(g.matrix, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))])[0]
+        sm = g.structural_matrix
+        bm = _value_matrix(g)
+        variants_s = [
+            specialize_gate(sm, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))])[0]
             for v in range(1 << len(nl))
         ]
+        if bm is sm:
+            variants = variants_s
+        else:
+            parametric = True
+            variants = [
+                specialize_gate(bm, nl_idx,
+                                [(v >> jj) & 1 for jj in range(len(nl))],
+                                classify=sm)[0]
+                for v in range(1 << len(nl))
+            ]
         if not loc:
             scal *= np.array([m[0, 0] for m in variants])[vg]
+            scal_s *= np.array([m[0, 0] for m in variants_s])[vg]
+            per_gate.append((gid, vg, nl_idx, None, None))
             continue
         positions = [pos_in_kernel[p] for _, p in loc]
         E = np.stack([embed_matrix(m, positions, k) for m in variants])
         T = np.matmul(E[vg], T)
+        if variants is variants_s:
+            Es = E
+        else:
+            Es = np.stack([embed_matrix(m, positions, k) for m in variants_s])
+        Ts = np.matmul(Es[vg], Ts)
+        per_gate.append(
+            (gid, vg, nl_idx, positions, E if variants is variants_s else None)
+        )
     T *= scal[:, None, None]
-    # diagonal detection
-    off = T - np.einsum("dij,ij->dij", T, np.eye(1 << k))
-    if np.abs(off).max() < 1e-12:
+    Ts *= scal_s[:, None, None]
+    if not parametric:
+        Ts = T
+    # diagonal detection (structural: same classification for every binding)
+    off = Ts - np.einsum("dij,ij->dij", Ts, np.eye(1 << k))
+    is_diag = np.abs(off).max() < 1e-12
+    if struct_cache is not None:
+        struct_cache[ckey] = {
+            "kind": "diag" if is_diag else "fused",
+            "per_gate": per_gate,
+        }
+    if is_diag:
         diag = np.ascontiguousarray(np.einsum("dii->di", T)).astype(dtype)
         return [Op("diag", tuple(kq), tuple(dep), diag, tuple(gids))]
     return [Op("fused", tuple(kq), tuple(dep), T.astype(dtype), tuple(gids))]
@@ -311,6 +422,7 @@ def _build_fused(
 def _build_scalar(
     circuit: Circuit, gid: int, phys_of: Dict[int, int], L: int,
     flip_before: Dict[int, Dict[int, int]], dtype,
+    struct_cache: Optional[Dict] = None,
 ) -> Optional[Op]:
     g = circuit.gates[gid]
     loc, nl = _gate_bit_split(g, phys_of, L)
@@ -319,17 +431,51 @@ def _build_scalar(
     dep_pos = {p: i for i, p in enumerate(dep)}
     fb = flip_before[gid]
     nl_idx = [j for j, _ in nl]
-    variants = np.array([
-        specialize_gate(g.matrix, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))])[0][0, 0]
+
+    ckey = ("s", gid)
+    cached = None if struct_cache is None else struct_cache.get(ckey)
+    if cached is not None:
+        if cached["drop"]:
+            return None
+        vg = cached["vg"]
+        if cached["variants"] is not None:  # constant gate
+            vec = cached["variants"][vg]
+        else:
+            variants = np.array([m[0, 0] for m in _gate_variants(g, nl_idx)])
+            vec = variants[vg]
+        return Op("scalar", (), tuple(dep), vec.astype(dtype), (gid,))
+
+    sm = g.structural_matrix
+    bm = _value_matrix(g)
+    variants_s = np.array([
+        specialize_gate(sm, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))])[0][0, 0]
         for v in range(1 << len(nl))
     ])
+    if bm is sm:
+        variants = variants_s
+    else:
+        variants = np.array([
+            specialize_gate(bm, nl_idx, [(v >> jj) & 1 for jj in range(len(nl))],
+                            classify=sm)[0][0, 0]
+            for v in range(1 << len(nl))
+        ])
     combos = np.arange(1 << len(dep))
     vg = np.zeros(1 << len(dep), dtype=np.int64)
     for jj, (j, p) in enumerate(nl):
         vg |= (((combos >> dep_pos[p]) & 1) ^ fb.get(g.qubits[j], 0)) << jj
     vec = variants[vg]
-    if np.allclose(vec, 1.0):
-        return None  # identity (e.g. pure control selection with U=I)
+    # identity drop is decided structurally (e.g. pure control selection with
+    # U=I) so the op stream is binding-independent; a binding-specific
+    # identity (theta=0) keeps its op and multiplies by ones.
+    drop = bool(np.allclose(variants_s[vg], 1.0))
+    if struct_cache is not None:
+        struct_cache[ckey] = {
+            "drop": drop,
+            "vg": vg,
+            "variants": variants_s if bm is sm else None,
+        }
+    if drop:
+        return None
     return Op("scalar", (), tuple(dep), vec.astype(dtype), (gid,))
 
 
@@ -396,6 +542,81 @@ def _try_merge(a: Op, b: Op, dtype) -> Optional[Op]:
     # diagonal-first scales the columns (T @ D); diagonal-last the rows (D @ T)
     T = T * dv[:, None, :] if other_first else T * dv[:, :, None]
     return Op("fused", fused.local_bits, tuple(dep_union), T.astype(dtype), gids)
+
+
+# ---------------------------------------------------------------------------
+# Structure/parameter split: the structural plan (stages, kernels, layouts, op
+# kinds/bits/shapes/uids, remap specs) is a pure function of the circuit
+# STRUCTURE + compile knobs, because every classification above evaluates
+# gates at generic probe angles. Rebinding parameters therefore re-materializes
+# tensor VALUES only — `bind_tensors` below — without re-running ILP staging,
+# DP kernelization, or invalidating XLA executables that take the tensors as
+# inputs (see repro.sim.engine).
+# ---------------------------------------------------------------------------
+
+
+def structural_signature(cc: CompiledCircuit) -> Tuple:
+    """Hashable signature of everything about a CompiledCircuit EXCEPT tensor
+    values. Two compiles of same-structure circuits (any bindings) must agree
+    on this; `bind_tensors` asserts it before swapping tensors in. Memoized
+    on the CompiledCircuit (op streams are immutable after compile) — the
+    serving path recomputes it per rebinding / per sweep point otherwise."""
+    sig = getattr(cc, "_sig_memo", None)
+    if sig is not None:
+        return sig
+    progs = []
+    for prog in cc.programs:
+        ops = []
+        for op in prog.ops:
+            for o in (op,) + op.gates:
+                ops.append((o.uid, o.kind, o.local_bits, o.dep_bits,
+                            tuple(o.tensor.shape), o.gate_ids, o.shm_group))
+        remap = (prog.remap_after.src_bit_of, prog.remap_after.flip_bits) \
+            if prog.remap_after is not None else None
+        progs.append((tuple(ops), prog.layout, remap, prog.n_shm_groups))
+    edge = tuple(
+        (r.src_bit_of, r.flip_bits) if r is not None else None
+        for r in (cc.initial_remap, cc.final_remap)
+    )
+    sig = (cc.n, cc.L, cc.R, cc.G, str(cc.dtype), tuple(progs), edge)
+    cc._sig_memo = sig
+    return sig
+
+
+def bind_tensors(
+    circuit: Circuit,
+    plan: SimulationPlan,
+    dtype=np.complex64,
+    peephole: bool = True,
+    expect: Optional[CompiledCircuit] = None,
+    struct_cache: Optional[Dict] = None,
+) -> Dict[int, np.ndarray]:
+    """The parameter-binding pass: materialize every op tensor for a (fully
+    bound) circuit against an existing structural plan.
+
+    Re-runs the numpy tensor-building of :func:`compile_plan` — classification
+    is structural, so the op stream comes out identical to ``expect``'s and
+    the result is a flat ``Op.uid -> tensor`` table the engine swaps into its
+    constant registry. Cost: pure host numpy; no ILP, no DP, no XLA.
+    """
+    if not circuit.is_bound:
+        raise UnboundParameterError(
+            f"cannot bind tensors: unbound parameters {circuit.param_names}"
+        )
+    cc = compile_plan(circuit, plan, dtype=dtype, peephole=peephole,
+                      struct_cache=struct_cache)
+    if expect is not None and structural_signature(cc) != structural_signature(expect):
+        raise ValueError(
+            "parameter binding changed the structural op stream — the cached "
+            "plan does not match this circuit (structure drift or compile bug)"
+        )
+    table: Dict[int, np.ndarray] = {}
+    for prog in cc.programs:
+        for op in prog.ops:
+            for o in (op,) + op.gates:
+                if o.tensor.size:
+                    table[o.uid] = o.tensor
+    return table
 
 
 def _peephole(ops: List[Op], dtype) -> List[Op]:

@@ -50,8 +50,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.circuit import Circuit
 from ..core.cost_model import CostModel, DEFAULT_COST_MODEL
+from ..core.gates import UnboundParameterError
 from ..core.partition import SimulationPlan, partition
-from .compile import CompiledCircuit, Op, RemapSpec, StageProgram, compile_plan
+from .compile import (
+    CompiledCircuit,
+    Op,
+    RemapSpec,
+    StageProgram,
+    bind_tensors,
+    compile_plan,
+)
 
 
 # ======================================================================
@@ -307,10 +315,14 @@ def _sig_arity(op_shapes: Tuple) -> int:
     return sum(len(e[1]) if e[0] == "shm" else 1 for e in op_shapes)
 
 
-def _build_shard_fn(op_shapes: Tuple, L: int, batched: bool = False):
+def _build_shard_fn(op_shapes: Tuple, L: int, batched: bool = False,
+                    sweep: bool = False):
     """Jitted per-shard stage function for one op signature. With ``batched``
     the shard argument carries a leading batch axis that is vmapped over the
-    shared gate tensors — one host<->device pass covers the whole batch."""
+    shared gate tensors — one host<->device pass covers the whole batch.
+    With ``sweep`` (implies batched blocks) the gate tensors carry the SAME
+    leading axis — element p of the block is transformed by binding p's
+    tensors (the fused parameter-sweep path)."""
 
     def apply_one(x, kind, local_bits, T):
         k = len(local_bits)
@@ -337,7 +349,9 @@ def _build_shard_fn(op_shapes: Tuple, L: int, batched: bool = False):
                 ti += 1
         return x.reshape(-1)
 
-    if batched:
+    if sweep:
+        fn = jax.vmap(fn, in_axes=(0,) + (0,) * _sig_arity(op_shapes))
+    elif batched:
         fn = jax.vmap(fn, in_axes=(0,) + (None,) * _sig_arity(op_shapes))
     return jax.jit(fn, donate_argnums=(0,))
 
@@ -422,6 +436,19 @@ class Backend:
     def setup(self, engine: "ExecutionEngine") -> None:
         self.engine = engine
 
+    def on_rebind(self) -> None:
+        """Called after the engine swaps in a new parameter binding (the
+        constant registry now holds the new tensors). Backends that cache
+        anything derived from tensor *values* must invalidate here; nothing
+        derived from structure (jitted executables, remap plans, shardings)
+        may be dropped — rebinding must not trigger recompilation."""
+
+    def supports_fused_sweep(self) -> bool:
+        """True when the backend has a fused ``execute_sweep`` path that is
+        valid in its current configuration; the engine falls back to
+        sequential rebinding (still zero new XLA traces) otherwise."""
+        return False
+
     def prepare(self, psi0, batch: bool = False):
         raise NotImplementedError
 
@@ -477,6 +504,7 @@ class PjitBackend(Backend):
             False: jax.jit(partial(self._exec, apply_final=False), donate_argnums=dargs),
         }
         self._batch_fns: Dict[bool, Callable] = {}
+        self._sweep_fns: Dict[bool, Callable] = {}
 
     # ------------------------------------------------------------- traced
     def _wsc(self, x):
@@ -484,35 +512,42 @@ class PjitBackend(Backend):
             x = lax.with_sharding_constraint(x, self.sharding)
         return x
 
-    def _exec(self, packed, apply_final: bool = True):
+    def _exec(self, packed, consts, apply_final: bool = True):
+        # `consts` (the op-tensor registry) is an INPUT to the traced loop,
+        # not a baked-in constant: one XLA executable serves every parameter
+        # binding of the circuit structure.
         eng = self.engine
+        eng.xla_compiles += 1  # python side effect: runs at trace time only
         G, R, L = eng.G, eng.R, eng.L
         x = self._wsc(packed.reshape((1 << G, 1 << R) + (2,) * L))
-        x = eng.stage_loop(x, self._apply_ops, self._remap, apply_final)
+        x = eng.stage_loop(
+            x, lambda v, prog: self._apply_ops(v, prog, consts),
+            self._remap, apply_final,
+        )
         return x.reshape(1 << G, 1 << R, 1 << L)
 
     def _remap(self, x, slot, spec: RemapSpec):
         eng = self.engine
         return self._wsc(apply_remap(x, spec, eng.n, eng.G, eng.R, eng.L))
 
-    def _apply_ops(self, x, prog: StageProgram):
+    def _apply_ops(self, x, prog: StageProgram, consts):
         eng = self.engine
         # (plain fused/diag/scalar ops stay XLA einsums so GSPMD is free to
         # fuse; with use_pallas an shm group runs as ONE pallas_call per
         # shard, vmapped over the packed shard axes)
         for op in prog.ops:
             if eng.use_pallas and op.kind == "shm":
-                x = self._apply_shm_pallas(x, op)
+                x = self._apply_shm_pallas(x, op, consts)
             else:
-                x = apply_op(x, op, eng.G, eng.R, eng.L, eng.dtype, eng.consts)
+                x = apply_op(x, op, eng.G, eng.R, eng.L, eng.dtype, consts)
         return x
 
-    def _select_batched(self, m: Op):
+    def _select_batched(self, m: Op, consts):
         """[S, ...] per-shard dep-selected tensor for one shm member."""
         eng = self.engine
         G, R, L = eng.G, eng.R, eng.L
         S = 1 << (G + R)
-        T = eng.consts.get(m.uid)
+        T = consts.get(m.uid)
         if T is None:
             T = jnp.asarray(m.tensor, dtype=eng.dtype)
         idx = _dep_index(m, G, R, L)
@@ -520,12 +555,12 @@ class PjitBackend(Backend):
             return T[idx.reshape(-1)]  # [S, ...] per-shard variant
         return jnp.broadcast_to(T[0], (S,) + T.shape[1:])
 
-    def _apply_shm_pallas(self, x, op: Op):
+    def _apply_shm_pallas(self, x, op: Op, consts):
         eng = self.engine
         L = eng.L
         S = 1 << (eng.G + eng.R)
         xf = x.reshape((S,) + (2,) * L)
-        gate_list, scal = _shm_operands(op, self._select_batched)
+        gate_list, scal = _shm_operands(op, lambda m: self._select_batched(m, consts))
         if not gate_list:
             return (xf * scal.reshape((S,) + (1,) * L)).reshape(x.shape)
         bits_list = [b for b, _ in gate_list]
@@ -553,7 +588,7 @@ class PjitBackend(Backend):
         return packed
 
     def execute(self, state, apply_final: bool = True):
-        return self._fns[apply_final](state)
+        return self._fns[apply_final](state, self.engine.consts)
 
     def execute_batch(self, states, apply_final: bool = True):
         if self.sharding is not None:
@@ -562,9 +597,27 @@ class PjitBackend(Backend):
             return super().execute_batch(states, apply_final)
         fn = self._batch_fns.get(apply_final)
         if fn is None:
-            fn = jax.jit(jax.vmap(partial(self._exec, apply_final=apply_final)))
+            fn = jax.jit(jax.vmap(partial(self._exec, apply_final=apply_final),
+                                  in_axes=(0, None)))
             self._batch_fns[apply_final] = fn
-        return fn(states)
+        return fn(states, self.engine.consts)
+
+    def supports_fused_sweep(self) -> bool:
+        # vmapping the sharding-constrained loop would need per-axis
+        # sharding rules (same restriction as execute_batch): with a mesh,
+        # the engine falls back to sequential rebinding
+        return self.sharding is None
+
+    def execute_sweep(self, state, consts_b, apply_final: bool = True):
+        """Fused parameter sweep: ONE state broadcast against a [P, ...]
+        batch of tensor registries — the whole stage loop vmaps over the
+        binding axis, so P parameter points cost one traced executable."""
+        fn = self._sweep_fns.get(apply_final)
+        if fn is None:
+            fn = jax.jit(jax.vmap(partial(self._exec, apply_final=apply_final),
+                                  in_axes=(None, 0)))
+            self._sweep_fns[apply_final] = fn
+        return fn(state, consts_b)
 
     def lower(self, psi_shape_only: bool = True):
         eng = self.engine
@@ -572,7 +625,9 @@ class PjitBackend(Backend):
             (1 << eng.G, 1 << eng.R, 1 << eng.L), eng.dtype,
             **({"sharding": self.sharding} if self.sharding else {}),
         )
-        return self._fns[True].lower(shape)
+        cshapes = {u: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                   for u, a in eng.consts.items()}
+        return self._fns[True].lower(shape, cshapes)
 
 
 class ShardMapBackend(Backend):
@@ -609,27 +664,32 @@ class ShardMapBackend(Backend):
 
     def _make_fn(self, apply_final: bool):
         nb = self.engine.R + self.engine.G
+        cspecs = {u: P() for u in self.engine.consts}  # tensors replicated
         fn = shard_map(
             partial(self._device_fn, apply_final=apply_final),
             mesh=self.mesh,
-            in_specs=P(self.axis_names if nb else None),
+            in_specs=(P(self.axis_names if nb else None), cspecs),
             out_specs=P(self.axis_names if nb else None),
             check_rep=False,
         )
         return jax.jit(fn, donate_argnums=(0,))
 
     # ------------------------------------------------------------- traced
-    def _device_fn(self, shard, apply_final: bool = True):
+    def _device_fn(self, shard, consts, apply_final: bool = True):
+        self.engine.xla_compiles += 1  # trace-time side effect
         view = shard.reshape((2,) * self.engine.L)
-        view = self.engine.stage_loop(view, self._apply_ops, self._remap, apply_final)
+        view = self.engine.stage_loop(
+            view, lambda v, prog: self._apply_ops(v, prog, consts),
+            self._remap, apply_final,
+        )
         return view.reshape(-1)
 
     def _remap(self, view, slot, spec: RemapSpec):
         return _apply_remap_plan(view, self._plans[slot], self.engine.L, self.axis_names)
 
-    def _apply_ops(self, view, prog: StageProgram):
+    def _apply_ops(self, view, prog: StageProgram, consts):
         for op in prog.ops:
-            view = self._apply_op(view, op)
+            view = self._apply_op(view, op, consts)
         return view
 
     def _dep_idx(self, op: Op):
@@ -638,20 +698,20 @@ class ShardMapBackend(Backend):
             idx = idx + (lax.axis_index(f"b{p}").astype(jnp.int32) << j)
         return idx
 
-    def _select(self, op: Op):
+    def _select(self, op: Op, consts):
         """Per-device tensor slice: dep-batched variant via ``lax.axis_index``."""
-        T = self.engine.consts.get(op.uid)
+        T = consts.get(op.uid)
         if T is None:
             T = jnp.asarray(op.tensor, dtype=self.engine.dtype)
         if op.dep_bits and T.shape[0] > 1:
             return T[self._dep_idx(op)]
         return T[0]
 
-    def _apply_op(self, view, op: Op):
+    def _apply_op(self, view, op: Op, consts):
         eng = self.engine
         if op.kind == "shm":
-            return self._apply_shm(view, op)
-        Tsel = self._select(op)
+            return self._apply_shm(view, op, consts)
+        Tsel = self._select(op, consts)
         if op.kind == "scalar":
             return view * Tsel
         if op.kind == "diag":
@@ -666,18 +726,18 @@ class ShardMapBackend(Backend):
             return kops.apply_fused_shard(view, Tsel, op.local_bits)
         return apply_matrix(view, Tsel, list(op.local_bits))
 
-    def _apply_shm(self, view, op: Op):
+    def _apply_shm(self, view, op: Op, consts):
         """One shm group = one memory pass. On the Pallas path the whole
         member list runs inside a single ``pallas_call``; member matrices are
         the dep-selected variants, standalone scalar members fold into the
         first matrix so they never cost an extra pass."""
         if not self.engine.use_pallas:
             for m in op.gates:
-                view = self._apply_op(view, m)
+                view = self._apply_op(view, m, consts)
             return view
         from ..kernels import ops as kops
 
-        gate_list, scal = _shm_operands(op, self._select)
+        gate_list, scal = _shm_operands(op, lambda m: self._select(m, consts))
         if not gate_list:
             return view * scal
         return kops.apply_shm_group(view, gate_list, op.local_bits)
@@ -699,14 +759,15 @@ class ShardMapBackend(Backend):
         return jax.device_put(jnp.asarray(psi0, dtype=eng.dtype), self.sharding)
 
     def execute(self, state, apply_final: bool = True):
-        return self._fn(apply_final)(state)
+        return self._fn(apply_final)(state, dict(self.engine.consts))
 
     def execute_batch(self, states, apply_final: bool = True):
         # collectives preclude a plain vmap over the shard program; run the
         # batch through the (already compiled) per-element function instead
         fn = self._fn(apply_final)
+        consts = dict(self.engine.consts)
         return jnp.stack([
-            fn(jax.device_put(states[b], self.sharding))
+            fn(jax.device_put(states[b], self.sharding), consts)
             for b in range(states.shape[0])
         ])
 
@@ -716,7 +777,9 @@ class ShardMapBackend(Backend):
     def lower(self):
         eng = self.engine
         shape = jax.ShapeDtypeStruct((1 << eng.n,), eng.dtype, sharding=self.sharding)
-        return self._fns[True].lower(shape)
+        cshapes = {u: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                   for u, a in eng.consts.items()}
+        return self._fns[True].lower(shape, cshapes)
 
 
 class HostOffloadBackend(Backend):
@@ -743,6 +806,15 @@ class HostOffloadBackend(Backend):
         }
         self._uploaded: set = set()  # op uids whose tensor reached the device
         self._dev_slices: Dict = {}  # (op.uid, combo) -> device slice
+        self._sweep_consts: Optional[Dict[int, jnp.ndarray]] = None  # [P, ...]
+        self._sweep_slices: Dict = {}  # (op.uid, combo) -> [P, ...] device slice
+
+    def on_rebind(self) -> None:
+        # per-shard tensor slices are derived from tensor VALUES: drop them
+        # (the jitted shard functions are keyed by op signature only and
+        # take tensors as arguments, so they survive every rebinding)
+        self._dev_slices.clear()
+        self._uploaded.clear()
 
     # ------------------------------------------------------------ tensors
     def _dep_combo(self, op: Op, shard_id: int) -> int:
@@ -758,13 +830,23 @@ class HostOffloadBackend(Backend):
         The full dep-batched tensor lives in the engine's constant registry
         (ONE upload per op); per-shard slices are device-side gathers cached
         by ``(op.uid, dep-combo)`` — no per-shard host->device re-upload.
+        In sweep mode the registry carries a leading binding axis and slices
+        come out ``[P, ...]``.
         """
+        combo = self._dep_combo(op, shard_id) if op.dep_bits else 0
+        key = (op.uid, combo)
+        if self._sweep_consts is not None:
+            sl = self._sweep_slices.get(key)
+            if sl is None:
+                sl = self._sweep_consts[op.uid][:, combo]
+                self._sweep_slices[key] = sl
+            else:
+                self.stats["tensor_slice_reuse"] += 1
+            return sl
         full = self.engine.consts[op.uid]
         if op.uid not in self._uploaded:
             self._uploaded.add(op.uid)
             self.stats["tensor_uploads"] += 1
-        combo = self._dep_combo(op, shard_id) if op.dep_bits else 0
-        key = (op.uid, combo)
         sl = self._dev_slices.get(key)
         if sl is None:
             sl = full[combo]
@@ -773,19 +855,23 @@ class HostOffloadBackend(Backend):
             self.stats["tensor_slice_reuse"] += 1
         return sl
 
-    def shard_fn(self, sig: Tuple, batched: bool = False):
+    def shard_fn(self, sig: Tuple, batched: bool = False, sweep: bool = False):
         eng = self.engine
-        key = (sig, eng.L, str(eng.np_dtype), batched)
-        return self.jit_cache.get(
-            key, lambda: _build_shard_fn(sig, eng.L, batched=batched)
-        )
+        key = (sig, eng.L, str(eng.np_dtype), batched, sweep)
+
+        def build():
+            eng.xla_compiles += 1
+            return _build_shard_fn(sig, eng.L, batched=batched, sweep=sweep)
+
+        return self.jit_cache.get(key, build)
 
     # -------------------------------------------------------------- eager
     def _stream_stage(self, state: np.ndarray, prog: StageProgram) -> np.ndarray:
         eng = self.engine
         L = eng.L
         batched = state.ndim == 2
-        fn = self.shard_fn(_op_sig(prog.ops), batched=batched)
+        fn = self.shard_fn(_op_sig(prog.ops), batched=batched,
+                           sweep=self._sweep_consts is not None)
         flat = _flat_ops(prog.ops)
         self.stats["memory_passes"] += prog.n_passes
         n_shards = 1 << eng.n_nonlocal
@@ -840,6 +926,25 @@ class HostOffloadBackend(Backend):
     def execute_batch(self, states, apply_final: bool = True):
         return self.execute(states, apply_final)  # primitives are batch-aware
 
+    def supports_fused_sweep(self) -> bool:
+        return True
+
+    def execute_sweep(self, state, consts_b, apply_final: bool = True):
+        """Fused sweep: tile the initial state into a [P, 2^n] host batch and
+        stream each shard-block ONCE through a shard function whose gate
+        tensors carry the binding axis — one host<->device pass covers all P
+        parameter points."""
+        P_ = next(iter(consts_b.values())).shape[0] if consts_b else 1
+        states = np.repeat(np.asarray(state).reshape(1, -1), P_, axis=0)
+        self._sweep_consts = consts_b
+        self._sweep_slices = {}
+        try:
+            return self.engine.stage_loop(states, self._stream_stage,
+                                          self._remap, apply_final)
+        finally:
+            self._sweep_consts = None
+            self._sweep_slices = {}
+
     def extract(self, out, batch: bool = False):
         return out  # already flat [2^n] / [B, 2^n]
 
@@ -848,10 +953,11 @@ class DenseBackend(Backend):
     """Per-gate dense oracle behind the same engine API.
 
     Deliberately a *different algorithm*: it ignores the compiled stage
-    programs entirely and applies the raw gate list to the dense state, so an
-    engine-vs-dense comparison cross-checks the whole compile + execute
-    pipeline. ``run_packed`` re-stores the logical state in the compiled
-    frame's physical order, making it bit-comparable to the planned backends.
+    programs entirely and applies the raw gate list (of the *currently bound*
+    circuit) to the dense state, so an engine-vs-dense comparison
+    cross-checks the whole compile + bind + execute pipeline.
+    ``run_packed`` re-stores the logical state in the compiled frame's
+    physical order, making it bit-comparable to the planned backends.
     """
 
     name = "dense"
@@ -869,7 +975,7 @@ class DenseBackend(Backend):
     def execute(self, state, apply_final: bool = True):
         from .statevector import simulate
 
-        psi = np.asarray(simulate(self.engine.circuit, psi0=state,
+        psi = np.asarray(simulate(self.engine.bound_circuit, psi0=state,
                                   dtype=self.engine.dtype))
         if not apply_final:
             frame = self.engine.measurement_frame
@@ -909,19 +1015,32 @@ class ExecutionEngine:
         compiled: Optional[CompiledCircuit] = None,
         **backend_kw,
     ):
-        self.circuit = circuit
+        self.circuit = circuit  # structural reference; may carry free Params
         self.plan = plan
         self.dtype = dtype
         self.np_dtype = np.dtype(dtype)
         self.use_pallas = use_pallas
+        self.peephole = peephole
         self.cc: CompiledCircuit = (
             compiled if compiled is not None
             else compile_plan(circuit, plan, dtype=self.np_dtype, peephole=peephole)
         )
         self.n, self.L, self.R, self.G = self.cc.n, self.cc.L, self.cc.R, self.cc.G
-        # op-tensor constant registry, keyed by stable ``Op.uid``: one device
-        # array per tensor, shared by every trace/backend call. Built eagerly
-        # — inside a jit trace the dtype cast would produce (leaked) tracers.
+        # parameter-binding state: a symbolic circuit compiles to a reusable
+        # structural program with placeholder tensors and must be bound
+        # before running; a concrete circuit IS its own first binding.
+        self.bound_circuit: Optional[Circuit] = (
+            circuit if circuit.is_bound else None
+        )
+        self.bind_count = 0
+        self.xla_compiles = 0  # traces of backend executables (rebinding
+        # must never increment this after warmup)
+        self._struct_cache: Dict = {}  # binding-independent build artifacts
+        # shared by every bind_tensors pass (see compile_plan struct_cache)
+        # op-tensor registry, keyed by stable ``Op.uid``: one device array per
+        # tensor, passed to the jitted stage loops as an INPUT pytree (never a
+        # baked-in constant) so one XLA executable serves every binding.
+        # Built eagerly — inside a jit trace the dtype cast would leak tracers.
         self.consts: Dict[int, jnp.ndarray] = {}
         for prog in self.cc.programs:
             for op in prog.ops:
@@ -934,6 +1053,57 @@ class ExecutionEngine:
             raise TypeError("backend_kw only apply when backend is given by name")
         self.backend = backend
         backend.setup(self)
+
+    # --------------------------------------------------------- parameters
+    @property
+    def param_names(self) -> Tuple[str, ...]:
+        return self.circuit.param_names
+
+    def bind(self, params) -> "ExecutionEngine":
+        """Bind the engine's circuit parameters (dict or flat vector ordered
+        by :attr:`param_names`) and swap the materialized op tensors into the
+        constant registry. Pure numpy + H2D: NO ILP/DP solves, NO new XLA
+        compiles — the executables take the tensors as inputs. Returns self."""
+        return self.bind_circuit(self.circuit.bind(params))
+
+    def bind_circuit(self, bound: Circuit) -> "ExecutionEngine":
+        """Install a fully-bound same-structure circuit as the current
+        binding (the serving cache calls this when a request's structure hits
+        but its angles differ)."""
+        if bound.structure_fingerprint() != self.circuit.structure_fingerprint():
+            raise ValueError("bind_circuit: circuit structure does not match "
+                             "this engine's compiled structure")
+        table = bind_tensors(bound, self.plan, dtype=self.np_dtype,
+                             peephole=self.peephole, expect=self.cc,
+                             struct_cache=self._struct_cache)
+        self.consts = {uid: jnp.asarray(t, dtype=self.dtype)
+                       for uid, t in table.items()}
+        self.bound_circuit = bound
+        self.bind_count += 1
+        self.backend.on_rebind()
+        return self
+
+    def _require_bound(self) -> None:
+        if self.bound_circuit is None:
+            raise UnboundParameterError(
+                f"engine has unbound parameters {self.param_names}; call "
+                "bind(params) (or run_sweep) before executing"
+            )
+
+    def _sweep_points(self, params_batch) -> List[dict]:
+        names = self.param_names
+        if isinstance(params_batch, (list, tuple)) and params_batch and \
+                isinstance(params_batch[0], dict):
+            return list(params_batch)
+        arr = np.asarray(params_batch, dtype=np.float64)
+        if arr.ndim == 1:
+            arr = arr[:, None]
+        if arr.shape[1] != len(names):
+            raise ValueError(
+                f"params_batch has {arr.shape[1]} columns; circuit has "
+                f"{len(names)} parameters {names}"
+            )
+        return [dict(zip(names, row)) for row in arr]
 
     # ------------------------------------------------------------- shared
     @property
@@ -960,18 +1130,25 @@ class ExecutionEngine:
         return x
 
     # ---------------------------------------------------------------- api
-    def run(self, psi0=None):
+    def run(self, psi0=None, params=None):
         """psi0: flat [2^n] in logical order (defaults to |0..0>). Returns
-        the final flat state in logical order."""
+        the final flat state in logical order. ``params`` (optional) rebinds
+        the circuit parameters first — a tensor swap, never a recompile."""
+        if params is not None:
+            self.bind(params)
+        self._require_bound()
         state = self.backend.prepare(psi0)
         return self.backend.extract(self.backend.execute(state, True))
 
-    def run_packed(self, psi0=None):
+    def run_packed(self, psi0=None, params=None):
         """Run but *skip the final inter-stage remap*: returns the state in
         the last stage's physical layout (with lazy flips still pending).
         Pair with :attr:`measurement_frame` and :mod:`repro.sim.measure` —
         sampling/marginals/expectations undo the layout on indices, which is
         far cheaper than permuting 2^n amplitudes."""
+        if params is not None:
+            self.bind(params)
+        self._require_bound()
         return self.backend.execute(self.backend.prepare(psi0), False)
 
     def run_batch(self, psi0s, apply_final: bool = True):
@@ -979,9 +1156,50 @@ class ExecutionEngine:
         shard program. Returns ``[B, 2^n]`` in logical order, or the batched
         packed layout when ``apply_final=False`` (measure each element via
         :func:`repro.sim.measure.measure_batch`)."""
+        self._require_bound()
         states = self.backend.prepare(psi0s, batch=True)
         out = self.backend.execute_batch(states, apply_final)
         return self.backend.extract(out, batch=True) if apply_final else out
+
+    def run_sweep(self, psi0, params_batch, apply_final: bool = True):
+        """Run ONE initial state against a batch of parameter bindings.
+
+        ``params_batch``: a ``[P, n_params]`` array (columns ordered by
+        :attr:`param_names`) or a list of ``{name: value}`` dicts. Tensor
+        tables for all P points are materialized host-side (pure numpy — the
+        structural plan is reused, zero ILP/DP solves) and the backend runs
+        its cheapest fused path: the pjit backend vmaps the whole stage loop
+        over the binding axis, the offload backend streams ``[P, 2^L]``
+        blocks so one host<->device pass covers the sweep, other backends
+        fall back to sequential rebinding against their already-compiled
+        executables (still zero new XLA compiles). Returns ``[P, 2^n]`` in
+        logical order (or the packed batch when ``apply_final=False``)."""
+        points = self._sweep_points(params_batch)
+        if not points:
+            raise ValueError("empty params_batch")
+        if self.backend.supports_fused_sweep():
+            tables = [
+                bind_tensors(self.circuit.bind(pt), self.plan,
+                             dtype=self.np_dtype, peephole=self.peephole,
+                             expect=self.cc, struct_cache=self._struct_cache)
+                for pt in points
+            ]
+            batched = {
+                uid: jnp.asarray(np.stack([t[uid] for t in tables]),
+                                 dtype=self.dtype)
+                for uid in tables[0]
+            }
+            state = self.backend.prepare(psi0)
+            out = self.backend.execute_sweep(state, batched, apply_final)
+            return self.backend.extract(out, batch=True) if apply_final else out
+        outs = []
+        for pt in points:
+            self.bind(pt)
+            out = self.run(psi0) if apply_final else self.run_packed(psi0)
+            outs.append(np.asarray(out).reshape(-1) if apply_final else out)
+        if apply_final:
+            return np.stack(outs)
+        return jnp.stack(outs) if not isinstance(outs[0], np.ndarray) else np.stack(outs)
 
     @property
     def measurement_frame(self):
@@ -1036,8 +1254,15 @@ def _placement_fingerprint(backend_kw: Optional[dict]) -> Tuple:
 
 @dataclass(frozen=True)
 class CircuitKey:
-    """Stable fingerprint of (circuit structure, architecture split, plan/
-    compile knobs): equal keys => the same compiled executable is valid."""
+    """Stable fingerprint of (circuit STRUCTURE, architecture split, plan/
+    compile knobs): equal keys => the same structural plan and the same XLA
+    executables are valid.
+
+    Deliberately parameter-blind: the whole pipeline (ILP staging, DP
+    kernelization, stage compilation, jitted stage loops with tensors as
+    inputs) depends only on circuit structure, so two circuits that differ
+    only in rotation angles share one cached engine — the serving path
+    rebinds tensors instead of recompiling (see :func:`engine_for`)."""
 
     digest: str
 
@@ -1057,16 +1282,12 @@ class CircuitKey:
         cost_model: CostModel = DEFAULT_COST_MODEL,
         extra=(),
     ) -> "CircuitKey":
-        gates = tuple(
-            (g.name, tuple(g.qubits), tuple(float(p) for p in g.params))
-            for g in circuit.gates
-        )
         cm = tuple(
             (f.name, _canon(getattr(cost_model, f.name)))
             for f in _dc_fields(cost_model)
         )
         payload = (
-            circuit.n_qubits, gates, (L, R, G), str(backend),
+            circuit.structure_fingerprint(), (L, R, G), str(backend),
             str(np.dtype(dtype)), bool(use_pallas), bool(peephole),
             staging_method, kernelize_method, cm, _canon(extra),
         )
@@ -1136,7 +1357,14 @@ def engine_for(
     **plan_kw,
 ) -> ExecutionEngine:
     """The serving entry point: partition + compile + build an engine, or
-    return the cached engine for an identical request.
+    return the cached engine for a structurally identical request.
+
+    The key is **structural** — two requests whose circuits differ only in
+    gate angles share one engine. On such a hit the cached engine is
+    *rebound* to the request's parameters (``bind_circuit``: a host-numpy
+    tensor materialization + H2D swap) — zero ILP/DP solves, zero new XLA
+    compiles. Symbolic circuits are returned unbound; call ``bind``/
+    ``run_sweep`` on the engine.
 
     Pass ``cache=None`` to force a fresh build; pass an explicit ``plan`` to
     bypass partitioning (such engines are NOT cached — the plan is outside
@@ -1165,4 +1393,21 @@ def engine_for(
                               **(backend_kw or {}))
         if cache is not None:
             cache.put(key, eng)
+    elif circuit.is_bound and (
+        eng.bound_circuit is None
+        or eng.bound_circuit.binding_signature() != circuit.binding_signature()
+    ):
+        # structural hit with different angles: the dominant serving pattern
+        # (same ansatz, new rotation parameters) — rebind, don't recompile
+        eng.bind_circuit(circuit)
+    elif not circuit.is_bound and (
+        eng.circuit.is_bound
+        or eng.circuit.binding_signature() != circuit.binding_signature()
+    ):
+        # symbolic request hitting an engine whose skeleton is concrete OR
+        # carries different Param names / affine coefficients (the structural
+        # key is deliberately blind to both): adopt the REQUESTED skeleton so
+        # the caller's bind()/run_sweep names and scales resolve correctly;
+        # the current binding is untouched
+        eng.circuit = circuit
     return eng

@@ -245,14 +245,26 @@ class Frame:
 
 
 @jax.jit
-def _jnp_shard_masses(x2d: jnp.ndarray) -> jnp.ndarray:
-    return jnp.sum(x2d.real**2 + x2d.imag**2, axis=1)
+def _jnp_mass_row(row: jnp.ndarray) -> jnp.ndarray:
+    """Probability mass of ONE shard row. Every measurer computes shard
+    masses through this exact executable so the sampling CDFs are
+    bit-identical across Dense/Sharded/Streaming for the same state array —
+    mixing jnp float32 reductions with numpy float64 ones made shot streams
+    diverge when a uniform draw landed between the two CDFs."""
+    return jnp.sum(row.real**2 + row.imag**2)
 
 
 @jax.jit
-def _jnp_local_probs(x2d: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
-    row = jax.lax.dynamic_index_in_dim(x2d, s, axis=0, keepdims=False)
-    return row.real**2 + row.imag**2
+def _jnp_row(x2d: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dynamic_index_in_dim(x2d, s, axis=0, keepdims=False)
+
+
+def _probs64(row: np.ndarray) -> np.ndarray:
+    """Shared host-side float64 |amp|^2 (the local-CDF path of every
+    measurer — see :func:`_jnp_mass_row` for why this must be one code
+    path)."""
+    row = np.asarray(row)
+    return row.real.astype(np.float64) ** 2 + row.imag.astype(np.float64) ** 2
 
 
 @partial(jax.jit, static_argnums=(1, 2))
@@ -315,8 +327,17 @@ class Measurer:
 
     def __init__(self, frame: Frame):
         self.frame = frame
+        self._masses: Optional[np.ndarray] = None  # computed once per state
 
     # -- backend primitives -------------------------------------------------
+    def shard_masses(self) -> np.ndarray:
+        """[n_shards] float64, cached (the measured state is immutable for
+        the lifetime of a measurer, and `_shard_masses` costs one device
+        dispatch per shard)."""
+        if self._masses is None:
+            self._masses = np.asarray(self._shard_masses(), dtype=np.float64)
+        return self._masses
+
     def _shard_masses(self) -> np.ndarray:  # [n_shards] float64
         raise NotImplementedError
 
@@ -349,7 +370,7 @@ class Measurer:
         L = self.frame.L
         rng = np.random.default_rng(seed)
         u = rng.random((shots, 2))
-        masses = np.asarray(self._shard_masses(), dtype=np.float64)
+        masses = self.shard_masses()
         cdf = np.cumsum(masses / masses.sum())
         cdf[-1] = 1.0
         sid = np.clip(
@@ -455,11 +476,15 @@ class DenseMeasurer(Measurer):
         return self._p2
 
     def _shard_masses(self) -> np.ndarray:
-        return self._probs().reshape(self.frame.n_shards, -1).sum(axis=1)
+        L = self.frame.L
+        return np.array([
+            float(_jnp_mass_row(jnp.asarray(self.state[s << L:(s + 1) << L])))
+            for s in range(self.frame.n_shards)
+        ], dtype=np.float64)
 
     def _local_probs(self, shard_id: int) -> np.ndarray:
         L = self.frame.L
-        return self._probs()[shard_id << L : (shard_id + 1) << L]
+        return _probs64(self.state[shard_id << L : (shard_id + 1) << L])
 
     def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
         n = self.frame.n
@@ -494,12 +519,15 @@ class ShardedMeasurer(Measurer):
         self.dtype = state.dtype
 
     def _shard_masses(self) -> np.ndarray:
-        return np.asarray(_jnp_shard_masses(self.x2d), dtype=np.float64)
+        return np.array([
+            float(_jnp_mass_row(self.x2d[s]))
+            for s in range(self.frame.n_shards)
+        ], dtype=np.float64)
 
     def _local_probs(self, shard_id: int) -> np.ndarray:
-        return np.asarray(
-            _jnp_local_probs(self.x2d, jnp.int32(shard_id)), dtype=np.float64
-        )
+        # ship the complex row (it already reaches the host for the local
+        # CDF) and square in shared float64 host math — see _probs64
+        return _probs64(np.asarray(_jnp_row(self.x2d, jnp.int32(shard_id))))
 
     def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
         return np.asarray(
@@ -546,15 +574,12 @@ class StreamingMeasurer(Measurer):
     def _shard_masses(self) -> np.ndarray:
         out = np.empty(self.frame.n_shards, dtype=np.float64)
         for s, shard in self._shards():
-            out[s] = float(
-                _jnp_shard_masses(jnp.asarray(shard).reshape(1, -1))[0]
-            )
+            out[s] = float(_jnp_mass_row(jnp.asarray(shard)))
         return out
 
     def _local_probs(self, shard_id: int) -> np.ndarray:
         L = self.frame.L
-        shard = self.state[shard_id << L : (shard_id + 1) << L]
-        return (shard.real**2 + shard.imag**2).astype(np.float64)
+        return _probs64(self.state[shard_id << L : (shard_id + 1) << L])
 
     def _marginal_phys(self, keep_bits: Tuple[int, ...]) -> np.ndarray:
         L = self.frame.L
@@ -693,11 +718,15 @@ def simulate_and_measure(
     mesh=None,
     use_pallas: bool = False,
     psi0=None,
+    params=None,
     **plan_kw,
 ) -> SimulationResult:
     """Simulate ``circuit`` on the chosen backend and consume the state
     through measurement only — the full amplitude vector is never gathered
     to one host (except on the dense 'ref' backend, which *is* one host).
+
+    ``params`` binds a parameterized circuit first (dict or flat vector, see
+    :meth:`repro.core.circuit.Circuit.bind`).
 
     Backends: ``'ref'`` (dense single-device), ``'pjit'`` (GSPMD staged
     executor), ``'shardmap'`` (explicit-collective executor), ``'offload'``
@@ -708,6 +737,8 @@ def simulate_and_measure(
 
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
+    if params is not None or not circuit.is_bound:
+        circuit = circuit.bind(params if params is not None else {})
     n = circuit.n_qubits
     t0 = time.time()
     meta: Dict[str, float] = {}
@@ -766,16 +797,44 @@ def measure_batch(
     """
     states = engine.run_batch(psi0s, apply_final=False)
     frame = engine.measurement_frame
+    return _measure_state_batch(states, len(psi0s), frame,
+                                engine.backend.name, shots, seed,
+                                marginals, observables)
+
+
+def _measure_state_batch(states, B, frame, backend_name, shots, seed,
+                         marginals, observables) -> List[SimulationResult]:
     results: List[SimulationResult] = []
-    for b in range(len(psi0s)):
+    for b in range(B):
         state = states[b]
         if isinstance(states, np.ndarray):
             state = np.ascontiguousarray(state)
         res = measure_to_result(
-            measurer_for(state, frame), backend=engine.backend.name,
+            measurer_for(state, frame), backend=backend_name,
             shots=shots, seed=seed + b, marginals=marginals,
             observables=observables,
         )
-        res.meta = {"batch_index": b, "batch_size": len(psi0s)}
+        res.meta = {"batch_index": b, "batch_size": B}
         results.append(res)
     return results
+
+
+def measure_sweep(
+    engine,
+    params_batch,
+    *,
+    psi0=None,
+    shots: int = 0,
+    seed: int = 0,
+    marginals: Sequence[Sequence[int]] = (),
+    observables: Union[str, PauliSum, Sequence] = (),
+) -> List[SimulationResult]:
+    """Parameter-sweep counterpart of :func:`measure_batch`: run ONE initial
+    state against a ``[P, n_params]`` batch of bindings through the engine's
+    fused sweep path (states stay in the final stage's physical layout) and
+    measure every point. Point ``p`` samples with ``seed + p``."""
+    states = engine.run_sweep(psi0, params_batch, apply_final=False)
+    P = len(states)
+    return _measure_state_batch(states, P, engine.measurement_frame,
+                                engine.backend.name, shots, seed,
+                                marginals, observables)

@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Regenerate the golden amplitude files.
+
+Run from the repo root AFTER verifying that a numerics change is intended:
+
+    PYTHONPATH=src python tests/golden/regenerate.py
+
+Each golden file stores the exact final amplitudes of one tiny fixed circuit,
+computed by the pure-numpy complex128 oracle (``simulate_np`` — no jax in the
+loop, so the files themselves cannot drift with jax/XLA versions). The test
+suite then checks BOTH the numpy oracle (tight: 1e-12, catches algorithm/gate
+-matrix drift) and the jax paths (loose: complex64 tolerance, catches silent
+cross-jax-version numeric drift) against these files.
+
+Format: JSON {"family", "n", "amps": [[re, im], ...]} with full float64 repr.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import numpy as np
+
+from repro.core import generators as gen
+from repro.sim.statevector import simulate_np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# (family, n): all tiny, all deterministic (seeded generators)
+CASES = [("ghz", 6), ("qft", 5), ("ising", 4), ("wstate", 6), ("qsvm", 5)]
+
+
+def main():
+    for fam, n in CASES:
+        psi = simulate_np(gen.FAMILIES[fam](n))
+        payload = {
+            "family": fam,
+            "n": n,
+            "amps": [[float(a.real), float(a.imag)] for a in psi],
+        }
+        path = os.path.join(HERE, f"{fam}_n{n}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {path} ({psi.size} amplitudes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Golden-file regression: exact amplitudes of tiny fixed circuits.
+
+The checked-in files under ``tests/golden/`` were produced by the pure-numpy
+complex128 oracle (``tests/golden/regenerate.py``), so they are independent
+of jax/XLA versions. Two comparisons per case:
+
+* the numpy oracle vs golden at 1e-12 — catches gate-matrix / generator /
+  oracle algorithm drift;
+* the jax dense simulator AND the staged engine vs golden at complex64
+  tolerance — catches silent cross-jax-version numeric drift (new XLA
+  simplifications, einsum lowering changes, dtype promotion changes).
+
+If a numerics change is INTENDED, rerun the regeneration script and commit
+the new files with the change.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import assert_states_close
+
+from repro.core import generators as gen
+from repro.core.partition import partition
+from repro.sim.engine import ExecutionEngine
+from repro.sim.statevector import simulate, simulate_np
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+CASES = [("ghz", 6), ("qft", 5), ("ising", 4), ("wstate", 6), ("qsvm", 5)]
+
+
+def _load(fam, n) -> np.ndarray:
+    path = os.path.join(GOLDEN_DIR, f"{fam}_n{n}.json")
+    with open(path) as f:
+        d = json.load(f)
+    assert d["family"] == fam and d["n"] == n
+    amps = np.array([complex(re, im) for re, im in d["amps"]])
+    assert amps.size == 2**n
+    return amps
+
+
+@pytest.mark.parametrize("fam,n", CASES)
+def test_numpy_oracle_matches_golden_exactly(fam, n):
+    golden = _load(fam, n)
+    psi = simulate_np(gen.FAMILIES[fam](n))
+    np.testing.assert_allclose(psi, golden, atol=1e-12, rtol=0,
+                               err_msg=f"{fam}(n={n}) numpy oracle drifted — "
+                               "gate matrices or generators changed")
+
+
+@pytest.mark.parametrize("fam,n", CASES)
+def test_jax_dense_matches_golden(fam, n):
+    golden = _load(fam, n)
+    psi = np.asarray(simulate(gen.FAMILIES[fam](n)))
+    np.testing.assert_allclose(psi, golden, atol=5e-6,
+                               err_msg=f"{fam}(n={n}) jax dense path drifted "
+                               "vs golden (jax/XLA numeric change?)")
+
+
+@pytest.mark.parametrize("fam,n", CASES)
+def test_staged_engine_matches_golden(fam, n):
+    """The full pipeline (ILP staging -> DP kernelization -> compile ->
+    pjit execute) against the checked-in amplitudes — elementwise, not just
+    fidelity, so phase drift is visible too."""
+    golden = _load(fam, n)
+    c = gen.FAMILIES[fam](n)
+    plan = partition(c, n - 2, 2, 0)
+    out = np.asarray(ExecutionEngine(c, plan, backend="pjit").run())
+    np.testing.assert_allclose(out, golden, atol=5e-5,
+                               err_msg=f"{fam}(n={n}) staged engine drifted")
+    assert_states_close(out, golden)
+
+
+def test_golden_regeneration_is_stable():
+    """regenerate.py writes byte-identical content for the current numerics
+    (guards against accidental nondeterminism in the generators)."""
+    import subprocess
+    import sys
+
+    before = {}
+    for fam, n in CASES:
+        with open(os.path.join(GOLDEN_DIR, f"{fam}_n{n}.json")) as f:
+            before[(fam, n)] = f.read()
+    r = subprocess.run(
+        [sys.executable, os.path.join(GOLDEN_DIR, "regenerate.py")],
+        capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    try:
+        for fam, n in CASES:
+            with open(os.path.join(GOLDEN_DIR, f"{fam}_n{n}.json")) as f:
+                assert f.read() == before[(fam, n)], (
+                    f"{fam}(n={n}): regeneration changed the golden file — "
+                    "the numpy oracle is nondeterministic or drifted"
+                )
+    finally:
+        for (fam, n), content in before.items():
+            with open(os.path.join(GOLDEN_DIR, f"{fam}_n{n}.json"), "w") as f:
+                f.write(content)
