@@ -13,6 +13,7 @@ Harness -> paper artifact map:
   bench_sampling   -> measurement subsystem (shots/marginals/expectations)
   bench_engine     -> unified engine: compile cache + batched states (serving)
   bench_param_sweep-> parameterized serving: warm rebind + fused sweeps
+  bench_vqe        -> variational workloads: adjoint vs parameter-shift grads
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -29,7 +30,7 @@ def main() -> None:
     ap.add_argument(
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "engine,param_sweep,sim_dryrun",
+             "engine,param_sweep,vqe,sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -143,6 +144,18 @@ def main() -> None:
         summary.append(("bench_param_sweep", 1e6 * dt / max(len(rows), 1),
                         f"rebind_speedup={rebind:.1f}x "
                         f"sweep_speedup={sweep:.2f}x"))
+
+    if "vqe" not in skip:
+        section("bench_vqe (variational: adjoint vs parameter-shift)")
+        from . import bench_vqe
+
+        t0 = time.time()
+        rows = bench_vqe.main([])
+        dt = time.time() - t0
+        best = max(r["adjoint_speedup"] for r in rows)
+        retr = sum(r["retraces"] for r in rows)
+        summary.append(("bench_vqe", 1e6 * dt / max(len(rows), 1),
+                        f"adjoint_speedup={best:.1f}x retraces={retr}"))
 
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")

@@ -76,6 +76,31 @@ class Gate:
         return G.gate_matrix(self.name, self.params)
 
     @property
+    def inverse_matrix(self) -> np.ndarray:
+        """Concrete ``U†`` (unitarity: the adjoint IS the inverse). The
+        reverse sweep (:mod:`repro.sim.adjoint`, ``CompiledCircuit.reverse``)
+        walks gates backwards through this."""
+        return self.matrix.conj().T
+
+    def adjoint_generator(self, slot: int) -> np.ndarray:
+        """Analytic ``∂U/∂params[slot]`` at this gate's bound values (the
+        gate-generator rule: ``-i/2·G·U`` for rotations, target-block-only
+        for controlled rotations). Chain-rule scaling for affine
+        :class:`Param` slots (``scale*θ+shift``) is the CALLER's job — this
+        differentiates with respect to the slot angle itself."""
+        return G.gate_derivative(self.name, self.params, slot)
+
+    @property
+    def param_slots(self) -> Tuple[Tuple[int, str, float], ...]:
+        """``(slot, param_name, d(slot_angle)/d(param))`` for every symbolic
+        slot — the static wiring the adjoint sweep contracts gradients
+        through."""
+        return tuple(
+            (j, p.name, p.scale)
+            for j, p in enumerate(self.params) if isinstance(p, Param)
+        )
+
+    @property
     def structural_matrix(self) -> np.ndarray:
         """Matrix at generic probe angles — depends on (name) only. All
         structural predicates (insularity, diagonality, staging/compile

@@ -314,6 +314,83 @@ def gate_matrix(name: str, params: Sequence[ParamValue] = ()) -> np.ndarray:
     return gd.fn(*params)
 
 
+# ---------------------------------------------------------------------------
+# Analytic derivatives (adjoint-mode differentiation)
+# ---------------------------------------------------------------------------
+
+
+def _controlled_block(dmat: np.ndarray, n_controls: int) -> np.ndarray:
+    """Embed a target-gate derivative into the controlled-gate index space.
+
+    d/dθ controlled(U(θ)) is zero everywhere EXCEPT the all-controls-on block
+    (the identity block does not depend on θ), so unlike :func:`controlled`
+    the off-block diagonal is 0, not 1."""
+    kt = dmat.shape[0]
+    dim = kt * (2**n_controls)
+    out = np.zeros((dim, dim), dtype=np.complex128)
+    out[dim - kt:, dim - kt:] = dmat
+    return out
+
+
+_P1 = np.diag([0.0, 1.0]).astype(np.complex128)  # |1><1|
+
+
+def _du3(theta: float, phi: float, lam: float, slot: int) -> np.ndarray:
+    c, s = math.cos(theta / 2), math.sin(theta / 2)
+    ep, el = np.exp(1j * phi), np.exp(1j * lam)
+    if slot == 0:  # d/dtheta
+        return 0.5 * np.array(
+            [[-s, -el * c], [ep * c, -ep * el * s]], dtype=np.complex128
+        )
+    if slot == 1:  # d/dphi
+        return np.array(
+            [[0, 0], [1j * ep * s, 1j * ep * el * c]], dtype=np.complex128
+        )
+    return np.array(  # d/dlam
+        [[0, -1j * el * s], [0, 1j * ep * el * c]], dtype=np.complex128
+    )
+
+
+# name -> tuple of per-slot derivative fns (same arity as the gate fn).
+# Rotation gates use the generator rule dU/dθ = -i/2 · G · U(θ); phase gates
+# use dU/dλ = i·|1><1|·U; controlled parametric gates differentiate the
+# target block only (the identity block is θ-independent).
+GATE_DERIVS: Dict[str, Tuple[Callable[..., np.ndarray], ...]] = {
+    "rx": (lambda t: -0.5j * X @ rx(t),),
+    "ry": (lambda t: -0.5j * Y @ ry(t),),
+    "rz": (lambda t: -0.5j * Z @ rz(t),),
+    "p": (lambda lam: 1j * _P1 @ p(lam),),
+    "u3": tuple(
+        (lambda slot: lambda t, f, l: _du3(t, f, l, slot))(s) for s in range(3)
+    ),
+    "cp": (lambda lam: _controlled_block(1j * _P1 @ p(lam), 1),),
+    "crx": (lambda t: _controlled_block(-0.5j * X @ rx(t), 1),),
+    "cry": (lambda t: _controlled_block(-0.5j * Y @ ry(t), 1),),
+    "crz": (lambda t: _controlled_block(-0.5j * Z @ rz(t), 1),),
+    "rzz": (lambda t: -0.5j * np.kron(Z, Z) @ rzz(t),),
+    "rxx": (lambda t: -0.5j * np.kron(X, X) @ rxx(t),),
+    "ryy": (lambda t: -0.5j * np.kron(Y, Y) @ ryy(t),),
+}
+
+
+def gate_derivative(name: str, params: Sequence[ParamValue], slot: int) -> np.ndarray:
+    """Analytic ``∂U/∂params[slot]`` at the (concrete) parameter values.
+
+    This is the adjoint sweep's gate-generator rule: exact matrices, no
+    finite differencing. Raises for non-parametric gates / unbound params."""
+    gd = GATE_DEFS[name]
+    if gd.n_params == 0:
+        raise ValueError(f"gate {name} has no parameters to differentiate")
+    if not (0 <= slot < gd.n_params):
+        raise ValueError(f"gate {name}: slot {slot} out of range [0, {gd.n_params})")
+    if is_symbolic(params):
+        raise UnboundParameterError(
+            f"gate {name} has unbound symbolic params {tuple(params)}; "
+            "bind before differentiating"
+        )
+    return GATE_DERIVS[name][slot](*(float(v) for v in params))
+
+
 @lru_cache(maxsize=None)
 def structural_matrix(name: str) -> np.ndarray:
     """The gate's matrix at generic :data:`PROBE_ANGLES` — parameter-free.

@@ -107,6 +107,13 @@ def main(argv=None):
     ap.add_argument("--sweep", default=None, metavar="FILE.json",
                     help="run a parameter sweep: every point reuses ONE "
                          "structural compile (implies --engine)")
+    ap.add_argument("--vqe", default=None, metavar="OBSERVABLE",
+                    help='minimize <H> over the circuit\'s free parameters '
+                         'with Adam over adjoint-mode value_and_grad, e.g. '
+                         '--vqe "Z0 Z1 + Z1 Z2 + 0.5*X0" (implies --engine)')
+    ap.add_argument("--vqe-steps", type=int, default=30)
+    ap.add_argument("--vqe-lr", type=float, default=0.1)
+    ap.add_argument("--vqe-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     n = args.n
@@ -119,7 +126,7 @@ def main(argv=None):
     marginals = [tuple(int(q) for q in spec.split(",")) for spec in args.marginal]
     binds = _parse_bind(args.bind)
     use_engine = (args.engine or args.batch > 1 or args.executor == "dense"
-                  or args.sweep is not None)
+                  or args.sweep is not None or args.vqe is not None)
     if use_engine and args.executor == "pergate":
         ap.error("--engine/--batch/--sweep do not support the pergate baseline")
     if not use_engine and (binds or not circ.is_bound):
@@ -148,9 +155,9 @@ def main(argv=None):
             ex.bind(binds)
             print(f"bound {len(binds)} params in {time.time() - t0:.3f}s "
                   "(tensor swap: no ILP/DP/XLA)")
-        elif not circ.is_bound and args.sweep is None:
+        elif not circ.is_bound and args.sweep is None and args.vqe is None:
             ap.error(f"circuit has free parameters {circ.param_names}; "
-                     "pass --bind NAME=VAL or --sweep FILE.json")
+                     "pass --bind NAME=VAL, --sweep FILE.json or --vqe OBS")
     else:
         t0 = time.time()
         plan = partition(circ, L, args.R, args.G,
@@ -158,6 +165,50 @@ def main(argv=None):
                          kernelize_method=args.kernelizer)
     print(f"partition: {plan.n_stages} stages, kernel cost {plan.total_kernel_cost:,.0f} us"
           f" (preprocess {plan.preprocess_time_s:.2f}s)")
+
+    # ------------------------------------------------------------ VQE loop
+    if args.vqe is not None:
+        import jax.numpy as jnp
+
+        from ..core import kernelization, staging
+        from ..optim.adamw import AdamWConfig, init as adam_init, \
+            update as adam_update
+
+        names = circ.param_names
+        if not names:
+            ap.error("--vqe needs a parameterized circuit "
+                     "(su2param/isingparam or symbolic JSON)")
+        rng = np.random.default_rng(args.vqe_seed)
+        theta = jnp.asarray(rng.uniform(0.0, 2 * np.pi, len(names)),
+                            dtype=jnp.float32)
+        cfg = AdamWConfig(lr=args.vqe_lr, weight_decay=0.0, warmup_steps=0,
+                          total_steps=max(args.vqe_steps, 1), min_lr_frac=1.0,
+                          moment_dtype="float32", clip_norm=10.0)
+        opt = adam_init(cfg, theta)
+        t0 = time.time()
+        value, grads = ex.value_and_grad(args.vqe, params=np.asarray(theta))
+        print(f"VQE over {len(names)} params, H = {args.vqe}; first "
+              f"value+grad (incl. adjoint trace) in {time.time() - t0:.2f}s")
+        solves0 = (staging.SOLVER_CALLS["ilp"], kernelization.SOLVER_CALLS["dp"])
+        xla0 = ex.xla_compiles
+        t0 = time.time()
+        for step in range(args.vqe_steps):
+            theta, opt, metrics = adam_update(
+                cfg, jnp.asarray(grads, jnp.float32), opt, theta)
+            value, grads = ex.value_and_grad(args.vqe, params=np.asarray(theta))
+            if step % max(args.vqe_steps // 10, 1) == 0 or step == args.vqe_steps - 1:
+                print(f"  step {step:4d}: <H> = {value:+.6f}  "
+                      f"|grad| = {float(np.linalg.norm(grads)):.4f}")
+        dt = time.time() - t0
+        assert (staging.SOLVER_CALLS["ilp"],
+                kernelization.SOLVER_CALLS["dp"]) == solves0, \
+            "VQE iterations must not re-run ILP/DP"
+        assert ex.xla_compiles == xla0, "VQE iterations must not retrace XLA"
+        print(f"VQE done: <H> = {value:+.6f} after {args.vqe_steps} steps in "
+              f"{dt:.2f}s ({dt / max(args.vqe_steps, 1):.3f}s/step; zero "
+              "solver calls, zero retraces)")
+        return {"energy": value, "theta": np.asarray(theta),
+                "param_names": names}
 
     # ----------------------------------------------------- parameter sweep
     if args.sweep is not None:

@@ -90,6 +90,18 @@ class RemapSpec:
     def is_identity(self) -> bool:
         return not self.flip_bits and all(i == p for p, i in enumerate(self.src_bit_of))
 
+    def inverse(self) -> "RemapSpec":
+        """The spec undoing this one. Forward is flips-then-permute
+        (``F = P∘Φ_f``); the inverse ``Φ_f∘P⁻¹`` re-expressed in
+        flips-first form is ``P⁻¹∘Φ_g`` with ``g = P(f)`` — the positions
+        the flipped bits landed on."""
+        src_inv = [0] * len(self.src_bit_of)
+        for p, b in enumerate(self.src_bit_of):
+            src_inv[b] = p
+        flips = set(self.flip_bits)
+        g = tuple(sorted(p for p, b in enumerate(self.src_bit_of) if b in flips))
+        return RemapSpec(src_bit_of=tuple(src_inv), flip_bits=g)
+
 
 @dataclass
 class StageProgram:
@@ -129,6 +141,64 @@ class CompiledCircuit:
     @property
     def total_gates(self) -> int:
         return sum(p.n_gates for p in self.programs)
+
+    def reverse(self) -> "CompiledCircuit":
+        """The reverse-ordered inverse op stream: a CompiledCircuit computing
+        ``U†`` for this circuit's ``U``, executable by every backend
+        unchanged.
+
+        Mechanical inversion of the *executed* linear maps: stages run in
+        reverse order, each stage's ops in reverse order with inverted
+        tensors (``T[v]†`` per dep combo — dep bits only select, so the
+        block-diagonal inverse is per-variant), shm members reversed inside
+        their single pass, and every remap replaced by its
+        :meth:`RemapSpec.inverse`. Lazy-flip bookkeeping needs no special
+        casing: flips were materialized inside the remaps being inverted.
+        The adjoint gradient sweep (:mod:`repro.sim.adjoint`) is the prime
+        consumer (undoing the forward state); ``initial``/``final`` remaps
+        swap roles.
+        """
+        rev_programs: List[StageProgram] = []
+        progs = self.programs
+        for i in range(len(progs) - 1, -1, -1):
+            prog = progs[i]
+            remap = progs[i - 1].remap_after.inverse() if i > 0 else None
+            rev_programs.append(StageProgram(
+                ops=[_invert_op(op) for op in reversed(prog.ops)],
+                layout=prog.layout,
+                remap_after=remap,
+                n_shm_groups=prog.n_shm_groups,
+            ))
+        cc = CompiledCircuit(
+            n=self.n, L=self.L, R=self.R, G=self.G, programs=rev_programs,
+            initial_remap=(self.final_remap.inverse()
+                           if self.final_remap is not None else None),
+            final_remap=(self.initial_remap.inverse()
+                         if self.initial_remap is not None else None),
+            dtype=self.dtype, needs_binding=self.needs_binding,
+        )
+        uid = 0
+        for prog in cc.programs:
+            for op in prog.ops:
+                for o in (op,) + op.gates:
+                    o.uid = uid
+                    uid += 1
+        return cc
+
+
+def _invert_op(op: Op) -> Op:
+    """Invert one op (fresh Op; uids reassigned by the caller)."""
+    if op.kind == "shm":
+        members = tuple(_invert_op(m) for m in reversed(op.gates))
+        return Op("shm", op.local_bits, op.dep_bits,
+                  np.zeros((0,), dtype=op.tensor.dtype), op.gate_ids,
+                  shm_group=op.shm_group, gates=members)
+    if op.kind == "fused":
+        T = np.ascontiguousarray(np.conj(np.swapaxes(op.tensor, -1, -2)))
+    else:  # 'diag' [2^d, 2^k] / 'scalar' [2^d]: unitary diagonal -> conj
+        T = np.conj(op.tensor)
+    return Op(op.kind, op.local_bits, op.dep_bits, T, op.gate_ids,
+              shm_group=op.shm_group)
 
 
 MAX_DEP_ENTRIES = 1 << 24  # cap on 2^d * 4^k tensor entries per op

@@ -129,6 +129,43 @@ class PauliSum:
         return max((q for t in self.terms for q, _ in t.ops), default=-1)
 
 
+_PAULI_MATS = {"X": G.X, "Y": G.Y, "Z": G.Z}
+
+
+def pauli_sum_ops(
+    obs: Union[str, PauliSum],
+) -> Tuple[Tuple[float, Tuple[Tuple[int, np.ndarray], ...]], ...]:
+    """A :class:`PauliSum` as an op stream: ``(coeff, ((qubit, 2x2), ...))``
+    per term. The adjoint sweep and :func:`apply_pauli_sum` consume this to
+    apply ``H`` to a state with one 1-qubit matrix application per non-I op —
+    no ``2^n x 2^n`` observable matrix is ever built."""
+    obs = PauliSum.coerce(obs)
+    return tuple(
+        (t.coeff, tuple((q, _PAULI_MATS[p]) for q, p in t.ops))
+        for t in obs.terms
+    )
+
+
+def apply_pauli_sum(psi, obs: Union[str, PauliSum]):
+    """``H|psi>`` for a dense *logical-order* state (flat ``[2^n]`` or view).
+
+    jnp-traceable: each Pauli term is an op stream of 1-qubit matrix
+    applications (:func:`repro.sim.apply.apply_matrix`), accumulated with the
+    term coefficients. This is the λ-initialization of the adjoint gradient
+    sweep (:mod:`repro.sim.adjoint`) and works under ``jit``/``vmap``."""
+    flat = jnp.asarray(psi).reshape(-1)
+    n = int(round(np.log2(flat.size)))
+    view = flat.reshape((2,) * n)
+    acc = None
+    for coeff, ops in pauli_sum_ops(obs):
+        w = view
+        for q, mat in ops:
+            w = apply_matrix(w, jnp.asarray(mat, dtype=flat.dtype), [q])
+        w = coeff * w
+        acc = w if acc is None else acc + w
+    return acc.reshape(jnp.asarray(psi).shape)
+
+
 def expectation_np(psi: np.ndarray, obs: Union[str, PauliSum]) -> float:
     """complex128 oracle via the pairing identity (no basis change):
 

@@ -12,11 +12,24 @@ suite then checks BOTH the numpy oracle (tight: 1e-12, catches algorithm/gate
 -matrix drift) and the jax paths (loose: complex64 tolerance, catches silent
 cross-jax-version numeric drift) against these files.
 
-Format: JSON {"family", "n", "amps": [[re, im], ...]} with full float64 repr.
+Parameterized cases additionally record the binding: the same symbolic
+structure evaluated at two bindings pins BOTH the bind pass and the
+underlying numerics.
+
+Safety: when the git working tree is dirty, the script REFUSES to overwrite
+and only prints the would-be diff summary — regenerating goldens on top of
+uncommitted changes silently launders numerics drift into the baseline.
+Pass ``--force`` to overwrite anyway (the test suite's regeneration-
+stability check does, inside its restore-afterwards sandbox).
+
+Format: JSON {"family", "n", ["binding",] "amps": [[re, im], ...]} with full
+float64 repr.
 """
 
+import argparse
 import json
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
@@ -31,20 +44,88 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 # (family, n): all tiny, all deterministic (seeded generators)
 CASES = [("ghz", 6), ("qft", 5), ("ising", 4), ("wstate", 6), ("qsvm", 5)]
 
+# one parameterized family at two bindings: (family, n, tag, binding)
+PARAM_CASES = [
+    ("isingparam", 4, "b0", {"J": 0.35, "h": 0.8}),
+    ("isingparam", 4, "b1", {"J": 1.1, "h": 0.4}),
+]
 
-def main():
+
+def golden_path(fam: str, n: int, tag: str = "") -> str:
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(HERE, f"{fam}_n{n}{suffix}.json")
+
+
+def _payloads():
+    """(path, payload) for every golden case at the CURRENT numerics."""
+    out = []
     for fam, n in CASES:
         psi = simulate_np(gen.FAMILIES[fam](n))
-        payload = {
-            "family": fam,
-            "n": n,
+        out.append((golden_path(fam, n), {
+            "family": fam, "n": n,
             "amps": [[float(a.real), float(a.imag)] for a in psi],
-        }
-        path = os.path.join(HERE, f"{fam}_n{n}.json")
+        }))
+    for fam, n, tag, binding in PARAM_CASES:
+        psi = simulate_np(gen.PARAM_FAMILIES[fam](n).bind(binding))
+        out.append((golden_path(fam, n, tag), {
+            "family": fam, "n": n, "binding": binding,
+            "amps": [[float(a.real), float(a.imag)] for a in psi],
+        }))
+    return out
+
+
+def _tree_is_dirty() -> bool:
+    """True when the enclosing git working tree has uncommitted changes.
+    Outside a git checkout (exported tarball) there is nothing to protect."""
+    try:
+        r = subprocess.run(
+            ["git", "status", "--porcelain"],
+            cwd=HERE, capture_output=True, text=True, timeout=30,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return False
+    if r.returncode != 0:
+        return False
+    return bool(r.stdout.strip())
+
+
+def _diff_summary(path: str, payload: dict) -> str:
+    """One line describing how regeneration would change ``path``."""
+    name = os.path.basename(path)
+    if not os.path.exists(path):
+        return f"  {name}: NEW file ({len(payload['amps'])} amplitudes)"
+    with open(path) as f:
+        old = json.load(f)
+    a_new = np.array([complex(re, im) for re, im in payload["amps"]])
+    a_old = np.array([complex(re, im) for re, im in old.get("amps", [])])
+    if a_old.shape != a_new.shape:
+        return f"  {name}: SHAPE CHANGE {a_old.shape} -> {a_new.shape}"
+    delta = float(np.abs(a_new - a_old).max())
+    if delta == 0.0:
+        return f"  {name}: unchanged"
+    return f"  {name}: CHANGED (max |Δamp| = {delta:.3e})"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite even with a dirty working tree")
+    args = ap.parse_args(argv)
+
+    payloads = _payloads()
+    if _tree_is_dirty() and not args.force:
+        print("REFUSING to overwrite goldens: the git working tree is dirty.")
+        print("Commit or stash first (or pass --force). Would-be changes:")
+        for path, payload in payloads:
+            print(_diff_summary(path, payload))
+        return 1
+    for path, payload in payloads:
+        print(_diff_summary(path, payload))
         with open(path, "w") as f:
             json.dump(payload, f, indent=1)
-        print(f"wrote {path} ({psi.size} amplitudes)")
+        print(f"wrote {path} ({len(payload['amps'])} amplitudes)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,192 @@
+"""Shared hypothesis strategies + builders for random (parameterized) circuits.
+
+Every property/metamorphic/fuzz test draws circuits through this module so
+the gate mix, qubit ranges and Param wiring are exercised uniformly — and so
+a failing example is reproducible from its ``(n, n_gates, seed)`` triple
+alone. Strategies draw only integers (``circuit_case``), and the
+deterministic builders below map a triple to a concrete :class:`Circuit`;
+this keeps the real-``hypothesis`` and ``_hypothesis_compat`` fallback paths
+byte-identical for the same draw.
+
+Builders:
+
+* :func:`build_circuit` — random circuit over the full gate registry
+  (1q/2q/3q, parametric and constant), ``param_mode`` controlling whether
+  angles stay concrete, become fresh :class:`Param`\\ s, or a seeded mix of
+  fresh/shared/affine symbolic angles (the hard case for the
+  structure/parameter split);
+* :func:`symbolize` — replace every concrete angle with a fresh named Param;
+* :func:`random_binding` — a seeded ``{name: value}`` binding for a
+  symbolic circuit;
+* :func:`repro_snippet` — a paste-ready reproduction snippet for a failing
+  case (the differential fuzzer dumps these).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+try:
+    from hypothesis import strategies as st
+except ImportError:  # clean env: deterministic fallback sweep
+    from _hypothesis_compat import st
+
+from repro.core import gates as G
+from repro.core.circuit import Circuit
+from repro.core.cost_model import CostModel
+from repro.core.gates import Param
+
+# prices fusion kernels out so the kernelizer emits SHM groups — THE shared
+# cost model for every test that must exercise the pallas/shm-group paths
+# (retune here, not per-file, or the suites diverge in kernel coverage)
+SHM_CM = CostModel(mxu_us_per_2k=1e7, shm_gate_us=1.0, shm_diag_gate_us=0.5)
+
+# gate pools: the full registry, split by arity (ccx exercises 3q staging)
+ONE_Q = ["h", "x", "y", "z", "s", "sdg", "t", "tdg", "sx", "rx", "ry", "rz",
+         "p", "u3"]
+TWO_Q = ["cx", "cy", "cz", "cp", "crx", "cry", "crz", "swap", "rzz", "rxx",
+         "ryy"]
+THREE_Q = ["ccx"]
+
+
+def circuit_case(min_n: int = 2, max_n: int = 7, min_gates: int = 4,
+                 max_gates: int = 22, max_seed: int = 10_000) -> Dict:
+    """Keyword strategies for ``@given(**circuit_case(...))``: draws the
+    ``(n, n_gates, seed)`` triple that :func:`build_circuit` maps to a
+    circuit."""
+    return dict(
+        n=st.integers(min_n, max_n),
+        n_gates=st.integers(min_gates, max_gates),
+        seed=st.integers(0, max_seed),
+    )
+
+
+def build_circuit(
+    n: int,
+    n_gates: int,
+    seed: int,
+    *,
+    two_qubit_frac: float = 0.45,
+    three_qubit_frac: float = 0.06,
+    param_mode: str = "concrete",
+) -> Circuit:
+    """Deterministic random circuit for ``(n, n_gates, seed)``.
+
+    ``param_mode``:
+
+    * ``"concrete"`` — every angle a seeded float (bound circuit);
+    * ``"symbolic"`` — every angle a fresh ``Param``;
+    * ``"mixed"``    — per-slot coin flip between a concrete angle, a fresh
+      Param, a *shared* Param (reused name) and an *affine* form
+      (``scale*θ+shift``) — the full Param surface in one circuit.
+    """
+    rng = np.random.default_rng(seed)
+    c = Circuit(n)
+    shared_pool = [f"w{j}" for j in range(max(2, n_gates // 4))]
+
+    def angle(gid: int, slot: int):
+        val = float(rng.uniform(0.1, 2 * math.pi))
+        if param_mode == "concrete":
+            return val
+        if param_mode == "symbolic":
+            return Param(f"p{gid}_{slot}")
+        r = rng.random()
+        if r < 0.4:
+            return val
+        if r < 0.65:
+            return Param(f"p{gid}_{slot}")
+        if r < 0.85:
+            return Param(shared_pool[int(rng.integers(len(shared_pool)))])
+        base = Param(shared_pool[int(rng.integers(len(shared_pool)))])
+        return base * float(rng.choice([-1.0, 0.5, 2.0])) \
+            + float(rng.uniform(-1.0, 1.0))
+
+    while c.n_gates < n_gates:
+        r = rng.random()
+        if n >= 3 and r < three_qubit_frac:
+            pool = THREE_Q
+        elif n >= 2 and r < three_qubit_frac + two_qubit_frac:
+            pool = TWO_Q
+        else:
+            pool = ONE_Q
+        name = pool[int(rng.integers(len(pool)))]
+        gd = G.GATE_DEFS[name]
+        qs = tuple(int(q) for q in rng.choice(n, size=gd.n_qubits,
+                                              replace=False))
+        params = tuple(angle(c.n_gates, j) for j in range(gd.n_params))
+        c.add(name, *qs, params=params)
+    return c
+
+
+def symbolize(c: Circuit) -> Circuit:
+    """Replace every concrete angle with a fresh named Param (``p{gid}_{j}``)."""
+    sym = Circuit(c.n_qubits)
+    for g in c.gates:
+        params = [Param(f"p{g.gid}_{j}") for j in range(len(g.params))]
+        sym.add(g.name, *g.qubits, params=params)
+    return sym
+
+
+def random_binding(c: Circuit, seed: int,
+                   lo: float = 0.0, hi: float = 2 * math.pi) -> Dict[str, float]:
+    """Seeded ``{name: value}`` binding covering every free parameter."""
+    rng = np.random.default_rng(seed)
+    return {nm: float(v)
+            for nm, v in zip(c.param_names,
+                             rng.uniform(lo, hi, len(c.param_names)))}
+
+
+def repro_snippet(c: Circuit, *, seed: Optional[int] = None,
+                  binding: Optional[Dict[str, float]] = None,
+                  note: str = "",
+                  engine: Optional[Dict] = None) -> str:
+    """A paste-ready snippet reproducing ``c`` (circuit JSON + binding) —
+    what the differential fuzzer dumps on a mismatch.
+
+    ``engine`` (optional): the FAILING backend configuration as a dict with
+    keys ``L``, ``R``, ``backend``, ``use_pallas``, ``shm_cm`` — the snippet
+    then rebuilds that exact engine run and diffs it against the oracle, so
+    triage replays the mismatch, not just the already-correct side."""
+    lines = [
+        "# ---- minimal repro " + ("(" + note + ") " if note else "") + "----",
+        "from repro.core.circuit import Circuit",
+        f"c = Circuit.from_json({c.to_json()!r})",
+    ]
+    if seed is not None:
+        lines.insert(1, f"# strategies seed = {seed}")
+    if binding:
+        lines.append(f"binding = {binding!r}")
+    lines += [
+        "from repro.sim.statevector import simulate_np",
+        "oracle = simulate_np(c.bind(binding))" if binding
+        else "oracle = simulate_np(c)",
+    ]
+    if engine is None:
+        lines.append("print(oracle)")
+        return "\n".join(lines)
+    cm_line = (
+        "from repro.core.cost_model import CostModel\n"
+        "cm = CostModel(mxu_us_per_2k=1e7, shm_gate_us=1.0, "
+        "shm_diag_gate_us=0.5)  # tests/strategies.SHM_CM"
+        if engine.get("shm_cm") else "cm = None"
+    )
+    lines += [
+        "import numpy as np",
+        "from repro.core.partition import partition",
+        "from repro.sim.engine import ExecutionEngine",
+        cm_line,
+        f"plan = partition(c, {engine['L']}, {engine['R']}, 0, "
+        "**({'cost_model': cm} if cm is not None else {}))",
+        f"eng = ExecutionEngine(c, plan, backend={engine['backend']!r}, "
+        f"use_pallas={bool(engine.get('use_pallas'))})",
+        # binding through eng.bind keeps the bind_tensors rebinding pass —
+        # the path the fuzzer exercised — in the replay
+        *(["eng.bind(binding)"] if binding else []),
+        "got = np.asarray(eng.run())",
+        "print('infidelity:', 1.0 - abs(np.vdot(got, oracle)) /",
+        "      (np.linalg.norm(got) * np.linalg.norm(oracle)))",
+    ]
+    return "\n".join(lines)

@@ -17,7 +17,6 @@ import numpy as np
 import pytest
 
 from repro.core import generators as gen
-from repro.core.cost_model import CostModel
 from repro.core.partition import SimulationPlan, partition
 from repro.sim import measure as M
 from repro.sim.engine import (
@@ -35,8 +34,7 @@ from repro.sim.statevector import fidelity, simulate_np
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# fusion kernels priced out -> kernelizer emits shm kernels (pallas regime)
-SHM_CM = CostModel(mxu_us_per_2k=1e7, shm_gate_us=1.0, shm_diag_gate_us=0.5)
+from strategies import SHM_CM  # shared shm-forcing cost model
 
 
 def _basis_batch(n: int, B: int) -> np.ndarray:

@@ -1,0 +1,284 @@
+"""Adjoint-mode gradient correctness: finite differences, parameter shift,
+and the zero-retrace serving contract.
+
+* ``value_and_grad`` on every backend vs central finite differences of the
+  complex128 oracle energy (per-param tolerance; f32 engine gradients within
+  1e-4, the f64 numpy oracle within 1e-8);
+* the exact parameter-shift rule cross-checks rotation gates (``±π/2``,
+  valid because each param feeds one rotation with unit scale);
+* analytic gate derivatives (``gate_derivative``) vs finite differences of
+  the gate matrices, for every parametric gate in the registry;
+* metamorphic serving contract: gradients across many bindings of one
+  structure reuse ONE adjoint executable — ``xla_compiles`` frozen after
+  warmup, zero ILP/DP solves ever (the sweep needs no partitioning);
+* ``CompiledCircuit.reverse()`` undoes the forward compiled run on a
+  backend, and inverts remaps/shm groups correctly.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import assert_states_close
+
+import strategies as strat
+
+from repro.core import gates as G
+from repro.core import kernelization, staging
+from repro.core.circuit import Circuit
+from repro.core.gates import GATE_DEFS, Param
+from repro.core.partition import partition
+from repro.sim.adjoint import AdjointProgram, adjoint_gradients_np
+from repro.sim.engine import ExecutionEngine
+from repro.sim.measure import apply_pauli_sum, expectation_np
+from repro.sim.statevector import simulate_np
+
+OBS = "Z0 Z1 + 0.7*X2 Z3 - 0.3*Y1 + 0.2*X0 Y3 + 0.1"
+
+
+def _ansatz(n=4):
+    """Entangling ansatz with fresh, shared and affine Params."""
+    c = Circuit(n)
+    for q in range(n):
+        c.add("ry", q, params=[Param(f"a{q}")])
+    for q in range(n - 1):
+        c.add("cx", q + 1, q)
+    for q in range(n):
+        c.add("rz", q, params=[Param(f"a{q}") * 0.5])
+    c.add("rzz", 0, 1, params=[Param("J")])
+    c.add("rzz", 2, 3, params=[Param("J")])
+    c.add("u3", 1, params=[Param("a0"), 0.4, Param("J")])
+    return c
+
+
+def _fd_grad(sym, names, theta, obs, eps=1e-6):
+    """Central finite differences of the complex128 oracle energy."""
+    def E(t):
+        return expectation_np(simulate_np(sym.bind(dict(zip(names, t)))), obs)
+
+    out = np.zeros(len(names))
+    for i in range(len(names)):
+        e = np.zeros(len(names))
+        e[i] = eps
+        out[i] = (E(theta + e) - E(theta - e)) / (2 * eps)
+    return out
+
+
+# ------------------------------------------------------- gate derivatives
+@pytest.mark.parametrize(
+    "name", sorted(n for n, gd in GATE_DEFS.items() if gd.n_params))
+def test_gate_derivative_matches_finite_difference(name):
+    gd = GATE_DEFS[name]
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        params = list(rng.uniform(0.1, 2 * np.pi, gd.n_params))
+        for slot in range(gd.n_params):
+            d = G.gate_derivative(name, params, slot)
+            eps = 1e-7
+            hi, lo = list(params), list(params)
+            hi[slot] += eps
+            lo[slot] -= eps
+            fd = (G.gate_matrix(name, hi) - G.gate_matrix(name, lo)) / (2 * eps)
+            np.testing.assert_allclose(d, fd, atol=1e-7,
+                                       err_msg=f"{name} slot {slot}")
+
+
+def test_gate_derivative_rejects_bad_input():
+    with pytest.raises(ValueError):
+        G.gate_derivative("h", (), 0)
+    with pytest.raises(ValueError):
+        G.gate_derivative("rx", (0.5,), 1)
+    with pytest.raises(G.UnboundParameterError):
+        G.gate_derivative("rx", (Param("t"),), 0)
+
+
+# --------------------------------------------------------- the f64 oracle
+def test_adjoint_oracle_matches_finite_differences_f64():
+    sym = _ansatz(4)
+    names = sym.param_names
+    theta = np.random.default_rng(0).uniform(0.2, 2.0, len(names))
+    value, grads = adjoint_gradients_np(sym, theta, OBS)
+    assert value == pytest.approx(
+        expectation_np(simulate_np(sym.bind(dict(zip(names, theta)))), OBS),
+        abs=1e-12)
+    fd = _fd_grad(sym, names, theta, OBS)
+    # adjoint is analytic; 1e-8 absorbs only the FD truncation error
+    np.testing.assert_allclose(grads, fd, atol=1e-8)
+
+
+def test_apply_pauli_sum_matches_expectation():
+    c = strat.build_circuit(4, 10, seed=2)
+    psi = simulate_np(c)
+    lam = np.asarray(apply_pauli_sum(psi.astype(np.complex64), OBS),
+                     dtype=np.complex128)
+    assert float(np.real(np.vdot(psi, lam))) == pytest.approx(
+        expectation_np(psi, OBS), abs=1e-5)
+
+
+# ----------------------------------------------------- engine, per backend
+@pytest.mark.parametrize("backend", ["pjit", "offload", "dense"])
+def test_value_and_grad_matches_fd_per_backend(backend):
+    sym = _ansatz(4)
+    names = sym.param_names
+    theta = np.random.default_rng(1).uniform(0.2, 2.0, len(names))
+    plan = partition(sym, 3, 1, 0)
+    eng = ExecutionEngine(sym, plan, backend=backend)
+    value, grads = eng.value_and_grad(OBS, params=theta)
+    vref, gref = adjoint_gradients_np(sym, theta, OBS)
+    assert value == pytest.approx(vref, abs=2e-5)
+    # f32 engine vs f64 FD: per-param 1e-4 absolute
+    fd = _fd_grad(sym, names, theta, OBS)
+    np.testing.assert_allclose(grads, fd, atol=1e-4)
+    np.testing.assert_allclose(grads, gref, atol=1e-4)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="shardmap needs 4 devices (multi-device CI job)")
+def test_value_and_grad_shardmap():
+    sym = _ansatz(4)
+    theta = np.random.default_rng(1).uniform(0.2, 2.0, len(sym.param_names))
+    plan = partition(sym, 2, 2, 0)
+    eng = ExecutionEngine(sym, plan, backend="shardmap")
+    value, grads = eng.value_and_grad(OBS, params=theta)
+    vref, gref = adjoint_gradients_np(sym, theta, OBS)
+    assert value == pytest.approx(vref, abs=2e-5)
+    np.testing.assert_allclose(grads, gref, atol=1e-4)
+    assert not eng.backend.supports_fused_grad()
+
+
+def test_parameter_shift_cross_check():
+    """Exact ±π/2 shift rule for a pure rotation ansatz (each param feeds
+    exactly one rotation gate, unit scale) vs the adjoint gradients."""
+    n = 4
+    c = Circuit(n)
+    for q in range(n):
+        c.add("ry", q, params=[Param(f"t{q}")])
+    for q in range(n - 1):
+        c.add("cx", q + 1, q)
+    for q in range(n):
+        c.add("rx", q, params=[Param(f"s{q}")])
+    names = c.param_names
+    theta = np.random.default_rng(2).uniform(0.2, 2.0, len(names))
+    obs = "Z0 Z1 + 0.5*X2 + Z3"
+
+    def E(t):
+        return expectation_np(simulate_np(c.bind(dict(zip(names, t)))), obs)
+
+    _, grads = adjoint_gradients_np(c, theta, obs)
+    for i in range(len(names)):
+        e = np.zeros(len(names))
+        e[i] = np.pi / 2
+        shift = 0.5 * (E(theta + e) - E(theta - e))
+        assert grads[i] == pytest.approx(shift, abs=1e-10), names[i]
+
+
+# ------------------------------------------------- serving contract (warm)
+@pytest.mark.parametrize("backend", ["pjit", "offload"])
+def test_grad_is_binding_smooth_zero_retraces(backend):
+    """Metamorphic serving contract: after one warm call, gradients at ANY
+    binding reuse the same executables (xla_compiles frozen) and never call
+    the ILP/DP solvers; grad varies smoothly with the binding while the
+    executable identity does not."""
+    sym = _ansatz(4)
+    names = sym.param_names
+    plan = partition(sym, 3, 1, 0)
+    eng = ExecutionEngine(sym, plan, backend=backend)
+    rng = np.random.default_rng(5)
+    theta = rng.uniform(0.2, 2.0, len(names))
+    eng.value_and_grad(OBS, params=theta)  # warmup traces
+    solves0 = (staging.SOLVER_CALLS["ilp"], staging.SOLVER_CALLS["greedy"],
+               kernelization.SOLVER_CALLS["dp"])
+    xla0 = eng.xla_compiles
+    prev = None
+    for step in range(6):
+        t = theta + 1e-3 * step
+        v, g = eng.value_and_grad(OBS, params=t)
+        if prev is not None:
+            # 1e-3 binding nudge => small gradient move (smoothness)
+            assert np.abs(g - prev).max() < 0.05
+        prev = g
+    assert eng.xla_compiles == xla0, "rebinding retraced the adjoint sweep"
+    assert (staging.SOLVER_CALLS["ilp"], staging.SOLVER_CALLS["greedy"],
+            kernelization.SOLVER_CALLS["dp"]) == solves0
+
+
+def test_grad_sweep_fused_vs_sequential():
+    """grad_sweep through the fused (vmapped, pjit) and sequential (offload)
+    paths agrees with the per-point oracle; capability flags are honest."""
+    sym = _ansatz(4)
+    plan = partition(sym, 3, 1, 0)
+    rng = np.random.default_rng(6)
+    batch = rng.uniform(0.2, 2.0, (3, len(sym.param_names)))
+    for backend, fused in (("pjit", True), ("offload", False)):
+        eng = ExecutionEngine(sym, plan, backend=backend)
+        assert eng.backend.supports_fused_grad() == fused
+        vals, grads = eng.grad_sweep(batch, OBS)
+        assert vals.shape == (3,) and grads.shape == (3, len(sym.param_names))
+        for p in range(3):
+            vref, gref = adjoint_gradients_np(sym, batch[p], OBS)
+            assert vals[p] == pytest.approx(vref, abs=2e-5)
+            np.testing.assert_allclose(grads[p], gref, atol=2e-4)
+
+
+def test_adjoint_program_rejects_mismatches():
+    sym = _ansatz(4)
+    prog = AdjointProgram(sym, OBS)
+    with pytest.raises(G.UnboundParameterError):
+        prog.tensors(sym)  # unbound
+    other = strat.build_circuit(4, 6, seed=0)
+    with pytest.raises(ValueError):
+        prog.tensors(other)
+    with pytest.raises(ValueError):
+        AdjointProgram(Circuit(2), "Z5")  # observable out of range
+
+
+def test_engine_without_params_has_empty_grad():
+    c = strat.build_circuit(3, 8, seed=4)  # concrete circuit
+    plan = partition(c, 3, 0, 0)
+    eng = ExecutionEngine(c, plan, backend="pjit")
+    value, grads = eng.value_and_grad("Z0 + Z1")
+    assert grads.shape == (0,)
+    assert value == pytest.approx(
+        expectation_np(simulate_np(c), "Z0 + Z1"), abs=2e-5)
+
+
+# -------------------------------------------------- compiled reverse stream
+@pytest.mark.parametrize("cm", [None, strat.SHM_CM], ids=["fused", "shm"])
+def test_compiled_reverse_undoes_forward(cm):
+    """run(cc) then run(cc.reverse()) is the identity — remap inversion,
+    per-variant tensor adjoints and shm member reversal all exercised."""
+    c = strat.build_circuit(6, 18, seed=9)
+    plan = partition(c, 4, 2, 0,
+                     **({"cost_model": cm} if cm is not None else {}))
+    eng = ExecutionEngine(c, plan, backend="pjit", use_pallas=cm is not None)
+    rng = np.random.default_rng(8)
+    psi0 = rng.normal(size=64) + 1j * rng.normal(size=64)
+    psi0 /= np.linalg.norm(psi0)
+    fwd = np.asarray(eng.run(psi0.astype(np.complex64)))
+    rev = ExecutionEngine(c, plan, backend="pjit", use_pallas=cm is not None,
+                          compiled=eng.cc.reverse())
+    back = np.asarray(rev.run(fwd))
+    assert_states_close(back, psi0, atol=1e-4)
+
+
+def test_remap_spec_inverse():
+    from repro.sim.compile import RemapSpec
+
+    spec = RemapSpec(src_bit_of=(2, 0, 3, 1), flip_bits=(0, 3))
+    inv = spec.inverse()
+    # forward: new bit p holds old bit src[p]; composing fwd∘inv on indices
+    # must be the identity relabeling including flips
+    n = 4
+    x = np.arange(1 << n)
+
+    def apply(spec, x):
+        out = np.zeros_like(x)
+        for p, b in enumerate(spec.src_bit_of):
+            bit = (x >> b) & 1
+            if b in spec.flip_bits:
+                bit ^= 1
+            out |= bit << p
+        return out
+
+    np.testing.assert_array_equal(apply(inv, apply(spec, x)), x)
+    assert RemapSpec(tuple(range(4)), ()).inverse().is_identity

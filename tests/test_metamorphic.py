@@ -19,6 +19,8 @@ except ImportError:  # clean env: deterministic fallback sweep
 
 from conftest import assert_states_close
 
+import strategies as strat
+
 from repro.core import generators as gen
 from repro.core.circuit import Circuit
 from repro.core.partition import partition
@@ -73,7 +75,7 @@ def _backend_state(circuit, backend, L, R, G, use_pallas=False, **kw):
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_gg_dagger_pairs_leave_state_invariant(backend, seed):
-    base = gen.random_circuit(7, 14, seed=seed)
+    base = strat.build_circuit(7, 14, seed)
     ext = _append_inverse_pairs(base, 6, seed + 1)
     ref = _backend_state(base, backend, 5, 2, 0)
     got = _backend_state(ext, backend, 5, 2, 0)
@@ -85,7 +87,7 @@ def test_gg_dagger_pairs_leave_state_invariant(backend, seed):
 @settings(max_examples=2, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_gg_dagger_pairs_shardmap(seed):
-    base = gen.random_circuit(7, 14, seed=seed)
+    base = strat.build_circuit(7, 14, seed)
     ext = _append_inverse_pairs(base, 6, seed + 1)
     ref = _backend_state(base, "shardmap", 5, 2, 0)
     got = _backend_state(ext, "shardmap", 5, 2, 0)
@@ -95,13 +97,10 @@ def test_gg_dagger_pairs_shardmap(seed):
 def test_gg_dagger_pairs_pallas_shm():
     """Same metamorphic relation through the Pallas shm-group path (fusion
     kernels priced out so the kernelizer emits shm groups)."""
-    from repro.core.cost_model import CostModel
-
-    shm_cm = CostModel(mxu_us_per_2k=1e7, shm_gate_us=1.0, shm_diag_gate_us=0.5)
     base = gen.qft(7)
     ext = _append_inverse_pairs(base, 6, seed=3)
-    ref = _backend_state(base, "pjit", 5, 2, 0, use_pallas=True, cost_model=shm_cm)
-    got = _backend_state(ext, "pjit", 5, 2, 0, use_pallas=True, cost_model=shm_cm)
+    ref = _backend_state(base, "pjit", 5, 2, 0, use_pallas=True, cost_model=strat.SHM_CM)
+    got = _backend_state(ext, "pjit", 5, 2, 0, use_pallas=True, cost_model=strat.SHM_CM)
     assert_states_close(got, ref)
 
 

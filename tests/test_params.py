@@ -20,7 +20,6 @@ from conftest import assert_states_close
 from repro.core import generators as gen
 from repro.core import kernelization, staging
 from repro.core.circuit import Circuit
-from repro.core.cost_model import CostModel
 from repro.core.gates import Param, UnboundParameterError
 from repro.core.partition import partition
 from repro.sim import measure as M
@@ -28,7 +27,7 @@ from repro.sim.compile import bind_tensors, compile_plan
 from repro.sim.engine import CircuitKey, CompileCache, ExecutionEngine, engine_for
 from repro.sim.statevector import simulate_np
 
-SHM_CM = CostModel(mxu_us_per_2k=1e7, shm_gate_us=1.0, shm_diag_gate_us=0.5)
+from strategies import SHM_CM  # shared shm-forcing cost model
 
 
 def _ansatz(n, vals=None):

@@ -17,14 +17,15 @@ import numpy as np
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings
 except ImportError:  # clean env: deterministic fallback sweep
-    from _hypothesis_compat import given, settings, st
+    from _hypothesis_compat import given, settings
 
-from repro.core import generators as gen
+import strategies as strat
+from strategies import circuit_case, random_binding, symbolize
+
 from repro.core import staging as S
-from repro.core.circuit import Circuit
-from repro.core.gates import GATE_DEFS, Param
+from repro.core.gates import GATE_DEFS
 from repro.core.kernelization import (
     greedy_kernelize,
     items_from_gates,
@@ -36,7 +37,7 @@ from repro.sim.compile import bind_tensors, compile_plan, structural_signature
 
 
 def _random_case(n, n_gates, seed):
-    c = gen.random_circuit(n, n_gates, seed=seed)
+    c = strat.build_circuit(n, n_gates, seed)
     rng = np.random.default_rng(seed + 1)
     L = int(rng.integers(max(2, n - 3), n))  # leave 0..3 non-local qubits
     R = n - L
@@ -45,7 +46,7 @@ def _random_case(n, n_gates, seed):
 
 # --------------------------------------------------------------- staging
 @settings(max_examples=10, deadline=None)
-@given(n=st.integers(5, 7), n_gates=st.integers(6, 22), seed=st.integers(0, 10_000))
+@given(**circuit_case(5, 7, 6, 22))
 def test_staging_invariants_random(n, n_gates, seed):
     c, L, R = _random_case(n, n_gates, seed)
     ilp = S.stage(c, L, R, 0, method="ilp")
@@ -62,9 +63,9 @@ def test_staging_invariants_random(n, n_gates, seed):
 
 
 @settings(max_examples=10, deadline=None)
-@given(n=st.integers(5, 8), n_gates=st.integers(8, 30), seed=st.integers(0, 10_000))
+@given(**circuit_case(5, 8, 8, 30))
 def test_kernelization_invariants_random(n, n_gates, seed):
-    c = gen.random_circuit(n, n_gates, seed=seed)
+    c = strat.build_circuit(n, n_gates, seed)
     items = items_from_gates(c.gates)
     if not items:
         return
@@ -76,7 +77,7 @@ def test_kernelization_invariants_random(n, n_gates, seed):
 
 
 @settings(max_examples=8, deadline=None)
-@given(n=st.integers(5, 7), n_gates=st.integers(6, 20), seed=st.integers(0, 10_000))
+@given(**circuit_case(5, 7, 6, 20))
 def test_full_partition_plan_valid_random(n, n_gates, seed):
     """End-to-end: partition() output passes validate_plan and its stage
     count respects the chain lower bound."""
@@ -87,33 +88,22 @@ def test_full_partition_plan_valid_random(n, n_gates, seed):
 
 
 # ------------------------------------------- structure/parameter invariance
-def _symbolize(c: Circuit) -> Circuit:
-    """Replace every concrete angle with a fresh named Param."""
-    sym = Circuit(c.n_qubits)
-    for g in c.gates:
-        params = [Param(f"p{g.gid}_{j}") for j in range(len(g.params))]
-        sym.add(g.name, *g.qubits, params=params)
-    return sym
-
-
 @settings(max_examples=6, deadline=None)
-@given(n=st.integers(5, 7), n_gates=st.integers(8, 20), seed=st.integers(0, 10_000))
+@given(**circuit_case(5, 7, 8, 20))
 def test_rebinding_preserves_structural_plan(n, n_gates, seed):
     """Any two bindings of one structure compile to the SAME structural op
     stream (kinds/bits/shapes/uids/remaps) — the invariant the parametric
     compile cache rests on. Includes special angles (0, pi)."""
     c, L, R = _random_case(n, n_gates, seed)
-    sym = _symbolize(c)
+    sym = symbolize(c)
     if not sym.param_names:
         return
     plan = partition(sym, L, R, 0)
     cc = compile_plan(sym, plan)
     assert cc.needs_binding
     sig = structural_signature(cc)
-    rng = np.random.default_rng(seed + 2)
     bindings = [
-        {nm: float(v) for nm, v in
-         zip(sym.param_names, rng.uniform(0.0, 2 * np.pi, len(sym.param_names)))},
+        random_binding(sym, seed + 2),
         {nm: 0.0 for nm in sym.param_names},
         {nm: float(np.pi) for nm in sym.param_names},
     ]

@@ -17,7 +17,6 @@ import numpy as np
 import pytest
 
 from repro.core import generators as gen
-from repro.core.cost_model import CostModel
 from repro.core.partition import partition
 from repro.kernels import ops as kops
 from repro.sim.compile import compile_plan
@@ -29,8 +28,7 @@ from repro.sim.statevector import fidelity, simulate_np
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# fusion kernels priced out -> kernelizer emits shared-memory kernels
-SHM_CM = CostModel(mxu_us_per_2k=1e7, shm_gate_us=1.0, shm_diag_gate_us=0.5)
+from strategies import SHM_CM  # shared shm-forcing cost model
 
 
 def _n_shm_ops(cc):
