@@ -1,0 +1,249 @@
+"""Serving-layer load harness: structure-keyed dynamic batching under load.
+
+Drives :class:`repro.serve.SimulationService` in-process with synthetic
+multi-tenant traffic over mixed circuit families and measures what the
+serving tentpole actually buys:
+
+* **sequential baseline** — the no-coalescing request path: every request
+  is a ``bind(point); run()`` against the same warm compiled engines (what
+  a request-at-a-time server does, and exactly the path the serving oracle
+  test compares against bit-for-bit);
+* **closed loop** — ``clients`` concurrent callers each issue ``rounds``
+  back-to-back requests against the coalescing service: same-structure
+  requests ride one fused ``run_sweep``; throughput over the sequential
+  baseline is ``batching_speedup`` (acceptance bar: >= 3x);
+* **open loop** — bursty Poisson arrivals with a skewed tenant mix,
+  reporting tail latency (p50/p95/p99), the achieved coalesce factor and
+  the backpressure reject rate.
+
+All measured passes run WARM and assert ZERO new ILP/DP solves and ZERO
+new XLA traces — steady-state serving is pure rebind + execute (batch
+sizes are padded to power-of-two buckets so variable sizes never retrace).
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import time
+
+import numpy as np
+
+from repro.core import kernelization, staging
+from repro.core.generators import PARAM_FAMILIES
+from repro.serve import (
+    ServeConfig,
+    ServiceOverloaded,
+    SimRequest,
+    SimulationService,
+)
+
+
+def _families(spec):
+    fams = []
+    for item in spec.split(","):
+        name, _, nq = item.partition(":")
+        sym = PARAM_FAMILIES[name](int(nq or 10))
+        fams.append((name, sym, sym.param_names))
+    return fams
+
+
+def _solves():
+    return (staging.SOLVER_CALLS["ilp"], staging.SOLVER_CALLS["greedy"],
+            kernelization.SOLVER_CALLS["dp"])
+
+
+def _engine(svc, sym, names):
+    req = svc._normalize(SimRequest(circuit=sym,
+                                    params=np.zeros(len(names))))
+    eng, _ = svc.pool.acquire(req)
+    return eng
+
+
+def _warm(svc, fams, max_batch):
+    """Compile every family's engine and deterministically trace every
+    power-of-two sweep bucket PLUS the single-shot run path, so no measured
+    pass can hit a fresh XLA trace."""
+    for _, sym, names in fams:
+        eng = _engine(svc, sym, names)
+        point = dict(zip(names, np.zeros(len(names))))
+        with eng.lock:
+            b = 1
+            while b <= max_batch:
+                eng.run_sweep(None, [point] * b, apply_final=True)
+                b *= 2
+            eng.bind(point)
+            np.asarray(eng.run(None))
+
+
+def _seq_baseline(svc, fams, rng, total):
+    """No-coalescing baseline: requests processed one at a time, each a
+    rebind + run against the already-compiled warm engine."""
+    engines = [(_engine(svc, sym, names), names) for _, sym, names in fams]
+    t0 = time.monotonic()
+    for i in range(total):
+        eng, names = engines[i % len(engines)]
+        with eng.lock:
+            eng.bind(dict(zip(names, rng.uniform(0.1, 6.2, len(names)))))
+            np.asarray(eng.run(None))
+    return time.monotonic() - t0
+
+
+async def _closed_loop(svc, fams, rng, clients, rounds):
+    """All clients hammer concurrently; returns (wall_s, latencies)."""
+    lats = []
+
+    async def client(c):
+        for _ in range(rounds):
+            name, sym, names = fams[c % len(fams)]
+            req = SimRequest(circuit=sym, tenant=f"t{c % 4}",
+                             params=rng.uniform(0.1, 6.2, len(names)))
+            t0 = time.monotonic()
+            await svc.submit(req)
+            lats.append(time.monotonic() - t0)
+
+    t0 = time.monotonic()
+    await asyncio.gather(*[client(c) for c in range(clients)])
+    return time.monotonic() - t0, lats
+
+
+async def _open_loop(svc, fams, rng, total, rate_hz, burst_mean):
+    """Bursty Poisson arrivals, skewed tenant mix (one hot tenant owns 60%
+    of traffic). Returns (latencies, rejects, wall_s)."""
+    futs, rejects, sent = [], 0, 0
+    t0 = time.monotonic()
+    while sent < total:
+        burst = int(min(1 + rng.poisson(burst_mean), total - sent))
+        for _ in range(burst):
+            name, sym, names = fams[sent % len(fams)]
+            tenant = "hot" if rng.random() < 0.6 else f"cold{rng.integers(3)}"
+            req = SimRequest(circuit=sym, tenant=tenant,
+                             params=rng.uniform(0.1, 6.2, len(names)))
+            try:
+                futs.append(svc.submit_nowait(req))
+            except ServiceOverloaded:
+                rejects += 1
+            sent += 1
+        await asyncio.sleep(float(rng.exponential(1.0 / rate_hz)))
+    resps = await asyncio.gather(*futs)
+    wall = time.monotonic() - t0
+    return [r.timings["e2e_s"] for r in resps], rejects, wall
+
+
+async def _amain(args):
+    fams = _families(args.families)
+    rng = np.random.default_rng(args.seed)
+    rows = []
+    n_req = args.clients * args.rounds
+
+    svc = SimulationService(ServeConfig(
+        backend=args.backend, max_batch_size=args.max_batch,
+        max_wait_ms=args.max_wait_ms, queue_depth=args.queue_depth,
+        workers=args.workers, cache_size=8,
+        tenant_weights={"hot": 1.0, "cold0": 2.0}))
+    async with svc:
+        _warm(svc, fams, args.max_batch)
+        await _closed_loop(svc, fams, rng, args.clients, 1)  # warm service
+
+        # -- sequential no-coalescing baseline (same warm engines) ---------
+        s0, x0 = _solves(), svc.pool.xla_compiles()
+        wall_seq = _seq_baseline(svc, fams, rng, n_req)
+        assert _solves() == s0, "warm sequential baseline re-solved ILP/DP"
+        assert svc.pool.xla_compiles() == x0, \
+            "warm sequential baseline re-traced XLA"
+
+        # -- closed loop through the coalescing service --------------------
+        wall_co, lats = await _closed_loop(svc, fams, rng,
+                                           args.clients, args.rounds)
+        assert _solves() == s0, "warm coalescing service re-solved ILP/DP"
+        assert svc.pool.xla_compiles() == x0, \
+            "warm coalescing service re-traced XLA"
+        closed_stats = svc.stats()
+
+        thr_seq = n_req / max(wall_seq, 1e-9)
+        thr_co = n_req / max(wall_co, 1e-9)
+        speedup = thr_co / max(thr_seq, 1e-9)
+        row = {
+            "mode": "closed",
+            "requests": n_req,
+            "clients": args.clients,
+            "wall_seq_s": wall_seq,
+            "wall_coalesce_s": wall_co,
+            "thr_seq_rps": thr_seq,
+            "thr_coalesce_rps": thr_co,
+            "speedup": speedup,
+            "coalesce_factor": closed_stats.get("coalesce_factor", 1.0),
+            "p50_ms": 1e3 * float(np.percentile(lats, 50)),
+            "p99_ms": 1e3 * float(np.percentile(lats, 99)),
+        }
+        rows.append(row)
+        print(f"closed,{n_req},{wall_seq:.3f},{wall_co:.3f},{speedup:.2f},"
+              f"{row['coalesce_factor']:.2f},{row['p50_ms']:.1f},"
+              f"{row['p99_ms']:.1f}")
+
+        # -- open loop on the same warm service ----------------------------
+        lats, rejects, wall = await _open_loop(
+            svc, fams, rng, args.open_requests, args.rate_hz,
+            args.burst_mean)
+        assert _solves() == s0, "open-loop pass re-solved ILP/DP"
+        assert svc.pool.xla_compiles() == x0, "open-loop pass re-traced XLA"
+        open_stats = svc.stats()
+        row = {
+            "mode": "open",
+            "requests": args.open_requests,
+            "completed": len(lats),
+            "rejects": rejects,
+            "wall_s": wall,
+            "throughput_rps": len(lats) / max(wall, 1e-9),
+            "coalesce_factor": open_stats.get("coalesce_factor", 1.0),
+            "p50_ms": 1e3 * float(np.percentile(lats, 50)),
+            "p95_ms": 1e3 * float(np.percentile(lats, 95)),
+            "p99_ms": 1e3 * float(np.percentile(lats, 99)),
+        }
+        rows.append(row)
+        print(f"open,{len(lats)}/{args.open_requests},rejects={rejects},"
+              f"{wall:.3f},{row['throughput_rps']:.0f}rps,"
+              f"{row['coalesce_factor']:.2f},{row['p50_ms']:.1f},"
+              f"{row['p95_ms']:.1f},{row['p99_ms']:.1f}")
+
+    if not args.no_assert:
+        assert rows[0]["speedup"] >= 3.0, (
+            f"structure-keyed batching must be >= 3x over the no-coalescing "
+            f"sequential baseline, got {rows[0]['speedup']:.2f}x")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", default="su2param:10,isingparam:10")
+    ap.add_argument("--backend", default="pjit",
+                    choices=["pjit", "shardmap", "offload", "dense"])
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=4.0)
+    ap.add_argument("--queue-depth", type=int, default=128)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--open-requests", type=int, default=96)
+    ap.add_argument("--rate-hz", type=float, default=300.0,
+                    help="mean burst arrival rate for the open-loop pass")
+    ap.add_argument("--burst-mean", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    print("mode,requests,wall_seq_s,wall_coalesce_s/rps,"
+          "speedup,coalesce,p50_ms,p99_ms")
+    rows = asyncio.run(_amain(args))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"(JSON written to {args.json})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ Harness -> paper artifact map:
   bench_engine     -> unified engine: compile cache + batched states (serving)
   bench_param_sweep-> parameterized serving: warm rebind + fused sweeps
   bench_vqe        -> variational workloads: adjoint vs parameter-shift grads
+  bench_serve      -> serving layer: structure-keyed dynamic batching under load
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -30,7 +31,7 @@ def main() -> None:
     ap.add_argument(
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "engine,param_sweep,vqe,sim_dryrun",
+             "engine,param_sweep,vqe,serve,sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -156,6 +157,21 @@ def main() -> None:
         retr = sum(r["retraces"] for r in rows)
         summary.append(("bench_vqe", 1e6 * dt / max(len(rows), 1),
                         f"adjoint_speedup={best:.1f}x retraces={retr}"))
+
+    if "serve" not in skip:
+        section("bench_serve (serving: structure-keyed dynamic batching)")
+        from . import bench_serve
+
+        t0 = time.time()
+        rows = bench_serve.main([])
+        dt = time.time() - t0
+        closed = next(r for r in rows if r["mode"] == "closed")
+        opened = next(r for r in rows if r["mode"] == "open")
+        n_req = sum(r["requests"] for r in rows)
+        summary.append(("bench_serve", 1e6 * dt / max(n_req, 1),
+                        f"batching_speedup={closed['speedup']:.2f}x "
+                        f"coalesce={closed['coalesce_factor']:.1f}x "
+                        f"open_p99={opened['p99_ms']:.0f}ms"))
 
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")

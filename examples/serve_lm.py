@@ -10,7 +10,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch import serve as serve_mod
+from repro.launch import serve_llm as serve_mod
 
 
 def main():

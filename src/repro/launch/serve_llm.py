@@ -1,7 +1,12 @@
-"""Batched serving driver: prefill + greedy decode loop.
+"""Batched **LLM** serving driver: transformer prefill + greedy decode loop.
+
+This drives the transformer stack (``repro.models`` / ``repro.configs``) —
+it is NOT the quantum-circuit simulation service. For the async multi-tenant
+*simulation* service (structure-keyed dynamic batching over the Atlas
+engine), see :mod:`repro.launch.serve_sim` and :mod:`repro.serve`.
 
 Example (CPU):
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+  PYTHONPATH=src python -m repro.launch.serve_llm --arch qwen2-1.5b --reduced \
       --batch 4 --prompt-len 32 --gen-len 16
 """
 

@@ -1,5 +1,5 @@
 """Step builders: jitted train / prefill / decode steps with production
-shardings. Shared by launch/train.py, launch/serve.py and launch/dryrun.py.
+shardings. Shared by launch/train.py, launch/serve_llm.py and launch/dryrun.py.
 """
 
 from __future__ import annotations

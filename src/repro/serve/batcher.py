@@ -1,0 +1,323 @@
+"""Structure-keyed dynamic batching: coalesce concurrent requests into one
+engine call.
+
+Atlas front-loads all expensive planning (ILP staging, DP kernelization,
+stage compilation, XLA tracing) behind a *structural* key, so at serve time
+requests that share a circuit structure differ only in cheap inputs: the
+parameter binding. The dominant serving shape — same ansatz, different
+angles, many tenants — therefore coalesces losslessly: a batch of P
+structure-identical requests is ONE ``run_sweep`` over their bindings
+(bit-identical to P sequential runs; the oracle test in
+``tests/test_serve.py`` asserts exact equality), and P fully-identical
+concrete requests are ONE execution fanned out to P responses.
+
+Components:
+
+* :class:`SimRequest` / :class:`SimResponse` — the wire-level request shape
+  (circuit or symbolic family skeleton + binding + measurement spec + tenant).
+* :class:`GroupKey` — what may share an engine call: the structural
+  :class:`repro.sim.engine.CircuitKey` digest, plus the binding signature for
+  concrete no-params requests (those dedup rather than sweep), plus whether
+  the caller wants the logical state (packed vs final-remapped execution).
+* :class:`DynamicBatcher` — pulls a fair *leader* from the admission queue,
+  harvests structure-matching riders, and flushes on **max batch size** or
+  the **leader's max-wait deadline**, whichever comes first. Executed batch
+  sizes are padded up to power-of-two buckets so steady-state traffic never
+  meets a new XLA trace shape.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.circuit import Circuit
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class SimRequest:
+    """One simulation request.
+
+    ``circuit`` is either a symbolic skeleton (free :class:`Param` angles)
+    with ``params`` carrying the binding — the coalescible shape — or a
+    fully-bound concrete circuit with ``params=None`` (identical concrete
+    requests deduplicate into one execution). Measurement is per-request:
+    requests in the same batch may ask for different shots/marginals/
+    observables; only the *execution* is shared.
+    """
+
+    circuit: Circuit
+    params: Optional[Union[Dict[str, float], Sequence[float]]] = None
+    tenant: str = "default"
+    shots: int = 0
+    marginals: Tuple = ()
+    observables: Tuple = ()
+    seed: int = 0
+    return_state: bool = False
+    L: Optional[int] = None  # None -> service default split
+    R: Optional[int] = None
+    G: Optional[int] = None
+    request_id: int = field(default_factory=lambda: next(_req_ids))
+
+    # stamped by the service / batcher (monotonic clock)
+    arrival_t: float = 0.0
+    picked_t: float = 0.0
+
+    @property
+    def wants_measure(self) -> bool:
+        return bool(self.shots or self.marginals or self.observables)
+
+    @property
+    def wants_state(self) -> bool:
+        # no measurement spec -> the response carries the |0..0> overlap
+        # digest off the logical state, so those requests group with the
+        # state-returning ones
+        return self.return_state or not self.wants_measure
+
+
+@dataclass
+class SimResponse:
+    request_id: int
+    tenant: str
+    result: Optional[object] = None  # repro.sim.result.SimulationResult
+    state: Optional[np.ndarray] = None  # logical [2^n] when return_state
+    amp0: Optional[complex] = None  # <0..0|psi> digest (always cheap)
+    batch_size: int = 1
+    cache_hit: bool = False
+    timings: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class GroupKey:
+    """Requests with equal keys may share one engine call."""
+
+    digest: str  # structural CircuitKey digest (structure + L/R/G + knobs)
+    binding: Optional[Tuple]  # binding_signature for concrete dedup groups
+    wants_state: bool
+
+
+def group_key_for(req: SimRequest, *, backend: str, use_pallas: bool,
+                  staging_method: str, kernelize_method: str,
+                  dtype) -> GroupKey:
+    """Compute the coalescing key (the request's L/R/G must already be
+    resolved by the service). Parameterized requests are keyed purely by
+    structure; concrete no-params requests additionally carry their binding
+    signature so only *identical* circuits deduplicate."""
+    from ..sim.engine import circuit_key_for
+
+    ck = circuit_key_for(
+        req.circuit, req.L, req.R, req.G, backend=backend, dtype=dtype,
+        use_pallas=use_pallas, staging_method=staging_method,
+        kernelize_method=kernelize_method,
+    )
+    binding = None
+    if req.params is None and req.circuit.is_bound:
+        binding = req.circuit.binding_signature()
+    return GroupKey(ck.digest, binding, req.wants_state)
+
+
+@dataclass
+class Batch:
+    key: GroupKey
+    requests: List[SimRequest]
+    leader_arrival: float
+    formed_t: float = 0.0
+    flush_reason: str = ""  # "size" | "deadline" | "drain"
+
+
+def bucket_size(p: int, max_batch: int) -> int:
+    """Pad a batch of ``p`` to the next power-of-two bucket (capped at
+    ``max_batch``): bounded distinct execution shapes => bounded XLA traces,
+    zero retraces in steady state under bursty arrivals."""
+    assert 1 <= p <= max_batch
+    b = 1
+    while b < p:
+        b <<= 1
+    return min(b, max_batch)
+
+
+class DynamicBatcher:
+    """Form and execute coalesced batches.
+
+    ``form`` is async (it waits on the arrival event up to the flush
+    deadline); ``execute`` is synchronous and runs on a worker thread — it
+    holds the engine lock across bind + run so concurrent batches on the
+    same structure serialize safely.
+    """
+
+    def __init__(self, max_batch_size: int = 16, max_wait_s: float = 0.004):
+        assert max_batch_size >= 1
+        self.max_batch_size = max_batch_size
+        self.max_wait_s = max_wait_s
+
+    # ------------------------------------------------------------- forming
+    async def form(self, queue, arrival: asyncio.Event,
+                   draining: bool = False) -> Optional[Batch]:
+        """Pop a fair leader and coalesce same-key riders until the batch is
+        full (size flush) or the leader has waited ``max_wait_s`` since
+        arrival (deadline flush). The deadline is anchored at the leader's
+        *arrival*, not at batch formation: a request that already sat out
+        its wait in a backlogged queue flushes immediately with whatever
+        riders are present."""
+        popped = queue.pop_fair()
+        if popped is None:
+            return None
+        key, leader = popped
+        now = time.monotonic()
+        leader.picked_t = now
+        batch = Batch(key=key, requests=[leader],
+                      leader_arrival=leader.arrival_t)
+        self._harvest(queue, batch)
+        flush_at = leader.arrival_t + self.max_wait_s
+        while len(batch.requests) < self.max_batch_size and not draining:
+            now = time.monotonic()
+            if now >= flush_at:
+                batch.flush_reason = "deadline"
+                break
+            arrival.clear()
+            try:
+                await asyncio.wait_for(arrival.wait(), flush_at - now)
+            except asyncio.TimeoutError:
+                batch.flush_reason = "deadline"
+                break
+            self._harvest(queue, batch)
+        if not batch.flush_reason:
+            batch.flush_reason = ("size" if len(batch.requests)
+                                  >= self.max_batch_size else "drain")
+        batch.formed_t = time.monotonic()
+        return batch
+
+    def _harvest(self, queue, batch: Batch) -> None:
+        take = self.max_batch_size - len(batch.requests)
+        if take > 0:
+            riders = queue.take_matching(batch.key, take)
+            now = time.monotonic()
+            for r in riders:
+                r.picked_t = now
+            batch.requests.extend(riders)
+        if len(batch.requests) >= self.max_batch_size:
+            batch.flush_reason = "size"
+
+    # ----------------------------------------------------------- execution
+    def execute(self, batch: Batch, pool, metrics) -> List[Tuple[SimRequest, SimResponse]]:
+        """Run one coalesced batch: acquire/rebind the engine from the warm
+        pool, execute ONE ``run_sweep`` (or one deduplicated run), then
+        measure each request against its own spec. Returns per-request
+        responses in batch order."""
+        import jax
+
+        from ..sim.measure import DenseMeasurer, measure_to_result, measurer_for
+
+        reqs = batch.requests
+        leader = reqs[0]
+        P = len(reqs)
+        with metrics.timer("bind_s") as t_bind:
+            engine, cache_hit = pool.acquire(leader)
+        wants_state = batch.key.wants_state
+        with engine.lock:
+            # another worker may have rebound the shared engine between our
+            # pool.acquire and taking the lock — re-assert the leader's
+            # binding/skeleton (no-op in the common single-worker case)
+            self._ensure_binding(engine, leader)
+            with metrics.timer("execute_s") as t_exec:
+                if batch.key.binding is not None:
+                    # dedup group: P identical concrete requests, ONE run
+                    out = (engine.run(None) if wants_state
+                           else engine.run_packed(None))
+                    out = jax.block_until_ready(out) \
+                        if not isinstance(out, np.ndarray) else out
+                    states = [out] * P
+                else:
+                    points = [self._point(engine, r) for r in reqs]
+                    padded = points + [points[-1]] * (
+                        bucket_size(P, self.max_batch_size) - P)
+                    out = engine.run_sweep(None, padded,
+                                           apply_final=wants_state)
+                    # ONE device->host transfer for the whole batch — slicing
+                    # the device array per request would pay P transfers
+                    out = np.asarray(out) \
+                        if not isinstance(out, np.ndarray) else out
+                    states = [out[i] for i in range(P)]
+            frame = engine.measurement_frame
+        metrics.inc("batches_total")
+        metrics.inc("requests_executed", P)
+        metrics.inc(f"flush_{batch.flush_reason}")
+        metrics.observe("batch_size", P)
+
+        responses = []
+        with metrics.timer("measure_s"):
+            for r, st in zip(reqs, states):
+                resp = SimResponse(
+                    request_id=r.request_id, tenant=r.tenant,
+                    batch_size=P, cache_hit=cache_hit,
+                )
+                if wants_state:
+                    psi = np.asarray(st).reshape(-1)
+                    resp.amp0 = complex(psi[0])
+                    if r.return_state:
+                        resp.state = psi
+                    if r.wants_measure:
+                        resp.result = measure_to_result(
+                            DenseMeasurer(psi), backend=engine.backend.name,
+                            shots=r.shots, seed=r.seed, marginals=r.marginals,
+                            observables=r.observables,
+                        )
+                else:
+                    st = np.ascontiguousarray(st) \
+                        if isinstance(st, np.ndarray) else st
+                    resp.result = measure_to_result(
+                        measurer_for(st, frame), backend=engine.backend.name,
+                        shots=r.shots, seed=r.seed, marginals=r.marginals,
+                        observables=r.observables,
+                    )
+                resp.timings = {
+                    "queue_wait_s": r.picked_t - r.arrival_t,
+                    "batch_form_s": batch.formed_t - r.picked_t,
+                    "bind_s": t_bind.elapsed,
+                    "execute_s": t_exec.elapsed,
+                }
+                metrics.observe("queue_wait_s", resp.timings["queue_wait_s"])
+                metrics.observe("batch_form_s", resp.timings["batch_form_s"])
+                responses.append((r, resp))
+        return responses
+
+    @staticmethod
+    def _ensure_binding(engine, leader: SimRequest) -> None:
+        """Re-apply the leader's binding (concrete) or skeleton (symbolic)
+        under the engine lock; mirrors ``engine_for``'s hit-path logic."""
+        c = leader.circuit
+        if c.is_bound and leader.params is None:
+            if (engine.bound_circuit is None
+                    or engine.bound_circuit.binding_signature()
+                    != c.binding_signature()):
+                engine.bind_circuit(c)
+        elif not c.is_bound:
+            if (engine.circuit.is_bound
+                    or engine.circuit.binding_signature()
+                    != c.binding_signature()):
+                engine.circuit = c
+                engine.__dict__.pop("_adjoint_progs", None)
+
+    @staticmethod
+    def _point(engine, r: SimRequest) -> Dict[str, float]:
+        """Normalize a request's binding to a {name: value} point against
+        the engine's adopted skeleton."""
+        if r.params is None:
+            return {}
+        if isinstance(r.params, dict):
+            return {k: float(v) for k, v in r.params.items()}
+        names = engine.circuit.param_names
+        vec = np.asarray(r.params, dtype=np.float64).reshape(-1)
+        if vec.size != len(names):
+            raise ValueError(
+                f"request {r.request_id}: binding vector has {vec.size} "
+                f"entries; circuit has {len(names)} parameters {names}"
+            )
+        return dict(zip(names, vec))

@@ -1,0 +1,352 @@
+"""Async multi-tenant simulation service.
+
+The request path, end to end::
+
+    submit(SimRequest)
+      └─ admission: bounded FairAdmissionQueue (reject + retry_after when
+         full; weighted fair order across tenants)         [queue_wait_s]
+    scheduler task (asyncio)
+      └─ DynamicBatcher.form: fair leader + structure-matching riders,
+         flush on max-batch-size or max-wait deadline      [batch_form_s]
+    worker thread (ThreadPoolExecutor, `workers` wide)
+      └─ WarmPool.acquire: structural CompileCache hit -> rebind (tensor
+         swap), miss -> partition+compile (admission-gated) [bind_s]
+      └─ ONE run_sweep / deduplicated run per batch         [execute_s]
+      └─ per-request measurement                            [measure_s]
+    response futures resolved on the event loop             [e2e_s]
+
+Everything expensive is front-loaded and cached: after warmup, steady-state
+load performs ZERO ILP/DP solves and ZERO XLA retraces (batch sizes are
+padded to power-of-two buckets; ``tests/test_serve.py`` asserts both).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .batcher import DynamicBatcher, SimRequest, SimResponse, group_key_for
+from .metrics import Metrics
+from .queue import FairAdmissionQueue, QueueFull
+
+
+class ServiceOverloaded(Exception):
+    """Admission rejected under backpressure; retry after ``retry_after``
+    seconds (estimated queue drain time at the current service rate)."""
+
+    def __init__(self, retry_after: float, depth: int):
+        super().__init__(
+            f"service overloaded (queue depth {depth}); retry after "
+            f"{retry_after:.3f}s"
+        )
+        self.retry_after = retry_after
+        self.depth = depth
+
+
+class ServiceStopped(Exception):
+    """The service shut down before this request completed."""
+
+
+@dataclass
+class ServeConfig:
+    """Serving knobs (see README "Serving" for the tuning guide)."""
+
+    # engine / plan
+    backend: str = "pjit"
+    use_pallas: bool = False
+    staging_method: str = "ilp"
+    kernelize_method: str = "dp"
+    dtype = jnp.complex64
+    R: int = 0  # default architecture split for requests that don't pin one
+    G: int = 0
+    # batching
+    max_batch_size: int = 16
+    max_wait_ms: float = 4.0
+    # admission
+    queue_depth: int = 256
+    tenant_weights: Dict[str, float] = field(default_factory=dict)
+    default_weight: float = 1.0
+    # execution
+    workers: int = 1
+    # warm pool
+    cache_size: int = 16
+    evict_scan: int = 4
+    admit_after: int = 1  # requests of a key before its engine is pooled
+
+
+class WarmPool:
+    """Compile-cache warm pool with per-key admission control.
+
+    Wraps a thread-safe :class:`repro.sim.engine.CompileCache`. Admission:
+    a structure is only *pooled* once it has been requested ``admit_after``
+    times — a scan of one-off structures builds throwaway engines instead of
+    evicting the hot set (TinyLFU-style doorkeeper; ``admit_after=1``
+    degenerates to plain insert-always LRU). Eviction inside the cache is
+    frequency-aware (least-hit of the LRU tail). Per-key request counts and
+    the cache's hit/miss/eviction counters feed :meth:`stats`.
+    """
+
+    def __init__(self, cfg: ServeConfig, metrics: Metrics):
+        from ..sim.engine import CompileCache
+
+        self.cfg = cfg
+        self.metrics = metrics
+        self.cache = CompileCache(maxsize=cfg.cache_size,
+                                  evict_scan=cfg.evict_scan)
+        self._seen: Dict[str, int] = {}  # digest -> lifetime request count
+        self._lock = threading.Lock()
+
+    def acquire(self, req: SimRequest) -> Tuple[object, bool]:
+        """Engine for one batch leader: ``(engine, cache_hit)``. Runs on a
+        worker thread; compile cost (miss) or rebind cost (hit with new
+        angles) both land in the caller's ``bind_s`` timer."""
+        from ..sim.engine import circuit_key_for, engine_for
+
+        cfg = self.cfg
+        key = circuit_key_for(
+            req.circuit, req.L, req.R, req.G, backend=cfg.backend,
+            dtype=cfg.dtype, use_pallas=cfg.use_pallas,
+            staging_method=cfg.staging_method,
+            kernelize_method=cfg.kernelize_method,
+        )
+        with self._lock:
+            seen = self._seen.get(key.digest, 0) + 1
+            self._seen[key.digest] = seen
+        hit = key in self.cache
+        admitted = hit or seen >= self.cfg.admit_after
+        eng = engine_for(
+            req.circuit, req.L, req.R, req.G, backend=cfg.backend,
+            dtype=cfg.dtype, use_pallas=cfg.use_pallas,
+            staging_method=cfg.staging_method,
+            kernelize_method=cfg.kernelize_method,
+            cache=self.cache if admitted else None,
+        )
+        self.metrics.inc("cache_hits" if hit else "cache_misses")
+        if not admitted:
+            self.metrics.inc("cache_admission_denied")
+        return eng, hit
+
+    def engines(self):
+        with self.cache._lock:
+            return list(self.cache._d.values())
+
+    def xla_compiles(self) -> int:
+        """Total XLA traces across pooled engines (steady-state load must
+        not move this)."""
+        return sum(e.xla_compiles for e in self.engines())
+
+    def stats(self) -> Dict:
+        out = self.cache.stats()
+        with self._lock:
+            out["requests_by_key"] = {d[:12]: c for d, c in self._seen.items()}
+        out["xla_compiles"] = self.xla_compiles()
+        return out
+
+
+class SimulationService:
+    """The asyncio serving loop. Use as an async context manager::
+
+        async with SimulationService(ServeConfig(max_batch_size=16)) as svc:
+            resp = await svc.submit(SimRequest(circuit=sym, params=theta))
+
+    ``submit`` raises :class:`ServiceOverloaded` under backpressure. All
+    engine work runs on a bounded worker pool off the event loop; responses
+    resolve in arrival-batch order.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None,
+                 metrics: Optional[Metrics] = None):
+        self.cfg = config or ServeConfig()
+        self.metrics = metrics or Metrics()
+        self.pool = WarmPool(self.cfg, self.metrics)
+        self.queue = FairAdmissionQueue(
+            capacity=self.cfg.queue_depth,
+            weights=self.cfg.tenant_weights,
+            default_weight=self.cfg.default_weight,
+        )
+        self.batcher = DynamicBatcher(
+            max_batch_size=self.cfg.max_batch_size,
+            max_wait_s=self.cfg.max_wait_ms / 1e3,
+        )
+        self._futures: Dict[int, asyncio.Future] = {}
+        self._arrival: Optional[asyncio.Event] = None
+        self._scheduler: Optional[asyncio.Task] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._inflight: Optional[asyncio.Semaphore] = None
+        self._stopping = False
+        self._ewma_req_s = 0.01  # EWMA seconds/request -> retry_after hint
+
+    # ---------------------------------------------------------- lifecycle
+    async def start(self) -> "SimulationService":
+        assert self._scheduler is None, "service already started"
+        self._stopping = False
+        self._arrival = asyncio.Event()
+        self._executor = ThreadPoolExecutor(
+            max_workers=self.cfg.workers, thread_name_prefix="sim-serve")
+        self._inflight = asyncio.Semaphore(self.cfg.workers)
+        self._scheduler = asyncio.create_task(self._run(), name="sim-serve-sched")
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop the loop. With ``drain`` (default) queued requests execute
+        first; otherwise they fail with :class:`ServiceStopped`."""
+        if self._scheduler is None:
+            return
+        self._stopping = True
+        if not drain:
+            for _, req in self.queue.drain():
+                fut = self._futures.pop(req.request_id, None)
+                if fut is not None and not fut.done():
+                    fut.set_exception(ServiceStopped())
+        self._arrival.set()
+        await self._scheduler
+        self._scheduler = None
+        self._executor.shutdown(wait=True)
+
+    async def __aenter__(self) -> "SimulationService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ------------------------------------------------------------- submit
+    def _normalize(self, req: SimRequest) -> SimRequest:
+        cfg = self.cfg
+        n = req.circuit.n_qubits
+        if req.R is None:
+            req.R = cfg.R
+        if req.G is None:
+            req.G = cfg.G
+        if req.L is None:
+            req.L = n - req.R - req.G
+        if req.params is None and not req.circuit.is_bound:
+            raise ValueError(
+                f"request {req.request_id}: circuit has free parameters "
+                f"{req.circuit.param_names}; pass params="
+            )
+        if req.params is not None and req.circuit.is_bound:
+            raise ValueError(
+                f"request {req.request_id}: params given for a fully-bound "
+                "circuit (submit the symbolic skeleton to coalesce)"
+            )
+        return req
+
+    def retry_after(self) -> float:
+        """Client backoff hint: estimated time to drain the current queue at
+        the EWMA per-request service rate."""
+        est = self.queue.depth * self._ewma_req_s + self.batcher.max_wait_s
+        return min(max(est, self.batcher.max_wait_s, 1e-3), 5.0)
+
+    async def submit(self, req: SimRequest) -> SimResponse:
+        """Admit one request and await its response. Raises
+        :class:`ServiceOverloaded` (with ``retry_after``) when the admission
+        queue is full."""
+        fut = self.submit_nowait(req)
+        return await fut
+
+    def submit_nowait(self, req: SimRequest) -> "asyncio.Future[SimResponse]":
+        """Open-loop submission: admit (or reject) now, return the response
+        future without awaiting it."""
+        assert self._scheduler is not None, "service not started"
+        if self._stopping:
+            raise ServiceStopped()
+        req = self._normalize(req)
+        cfg = self.cfg
+        key = group_key_for(
+            req, backend=cfg.backend, use_pallas=cfg.use_pallas,
+            staging_method=cfg.staging_method,
+            kernelize_method=cfg.kernelize_method, dtype=cfg.dtype,
+        )
+        self.metrics.inc("requests_total")
+        req.arrival_t = time.monotonic()
+        try:
+            self.queue.push(req, tenant=req.tenant, key=key)
+        except QueueFull as e:
+            self.metrics.inc("rejects_total")
+            raise ServiceOverloaded(self.retry_after(), e.depth) from None
+        fut: asyncio.Future = asyncio.get_running_loop().create_future()
+        self._futures[req.request_id] = fut
+        self._arrival.set()
+        return fut
+
+    # ---------------------------------------------------------- scheduler
+    async def _run(self) -> None:
+        while True:
+            if len(self.queue) == 0:
+                if self._stopping:
+                    break
+                self._arrival.clear()
+                # re-check after clear: a push may have raced the clear
+                if len(self.queue) == 0:
+                    await self._arrival.wait()
+                continue
+            with self.metrics.timer("form_s"):
+                batch = await self.batcher.form(
+                    self.queue, self._arrival, draining=self._stopping)
+            if batch is None:
+                continue
+            await self._inflight.acquire()
+            loop = asyncio.get_running_loop()
+            t0 = time.monotonic()
+            task = loop.run_in_executor(
+                self._executor, self.batcher.execute,
+                batch, self.pool, self.metrics)
+            task.add_done_callback(
+                lambda t, b=batch, t0=t0: self._deliver(t, b, t0))
+        # wait for in-flight batches before returning
+        for _ in range(self.cfg.workers):
+            await self._inflight.acquire()
+
+    def _deliver(self, task, batch, t0: float) -> None:
+        """Resolve response futures for one executed batch (runs on the
+        event loop — run_in_executor futures call back there)."""
+        self._inflight.release()
+        now = time.monotonic()
+        dt = now - t0
+        alpha = 0.2
+        self._ewma_req_s = ((1 - alpha) * self._ewma_req_s
+                            + alpha * dt / max(len(batch.requests), 1))
+        exc = task.exception()
+        if exc is not None:
+            self.metrics.inc("batch_errors")
+            for r in batch.requests:
+                fut = self._futures.pop(r.request_id, None)
+                if fut is not None and not fut.done():
+                    fut.set_exception(exc)
+            return
+        for r, resp in task.result():
+            fut = self._futures.pop(r.request_id, None)
+            e2e = now - r.arrival_t
+            resp.timings["e2e_s"] = e2e
+            self.metrics.observe("e2e_s", e2e)
+            self.metrics.inc("responses_total")
+            if fut is not None and not fut.done():
+                fut.set_result(resp)
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict:
+        """One JSON snapshot of the whole serving path: stage timers +
+        latency percentiles, coalesce factor, queue/tenant state, warm-pool
+        and solver counters."""
+        from ..core import kernelization, staging
+
+        snap = self.metrics.snapshot()
+        snap["queue"] = {
+            "depth": self.queue.depth,
+            "capacity": self.queue.capacity,
+            "tenants": self.queue.tenants(),
+        }
+        snap["warm_pool"] = self.pool.stats()
+        snap["solver_calls"] = {
+            "ilp": staging.SOLVER_CALLS["ilp"],
+            "greedy": staging.SOLVER_CALLS["greedy"],
+            "dp": kernelization.SOLVER_CALLS["dp"],
+        }
+        snap["retry_after_s"] = self.retry_after()
+        return snap

@@ -36,6 +36,7 @@ register it in :data:`BACKENDS`.
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, fields as _dc_fields
 from functools import partial
@@ -58,6 +59,7 @@ from .compile import (
     RemapSpec,
     StageProgram,
     bind_tensors,
+    bind_tensors_sweep,
     compile_plan,
 )
 
@@ -1031,6 +1033,11 @@ class ExecutionEngine:
     ):
         self.circuit = circuit  # structural reference; may carry free Params
         self.plan = plan
+        # serving-path mutual exclusion: ``bind``/``run*`` mutate shared
+        # engine state (the constant registry, ``bound_circuit``); concurrent
+        # callers (the serve worker pool, ``engine_for`` rebinds) hold this
+        # around any bind+execute sequence. Single-threaded use never blocks.
+        self.lock = threading.RLock()
         self.dtype = dtype
         self.np_dtype = np.dtype(dtype)
         self.use_pallas = use_pallas
@@ -1192,16 +1199,13 @@ class ExecutionEngine:
         if not points:
             raise ValueError("empty params_batch")
         if self.backend.supports_fused_sweep():
-            tables = [
-                bind_tensors(self.circuit.bind(pt), self.plan,
-                             dtype=self.np_dtype, peephole=self.peephole,
-                             expect=self.cc, struct_cache=self._struct_cache)
-                for pt in points
-            ]
+            tables_b = bind_tensors_sweep(
+                [self.circuit.bind(pt) for pt in points], self.plan,
+                dtype=self.np_dtype, peephole=self.peephole,
+                expect=self.cc, struct_cache=self._struct_cache)
             batched = {
-                uid: jnp.asarray(np.stack([t[uid] for t in tables]),
-                                 dtype=self.dtype)
-                for uid in tables[0]
+                uid: jnp.asarray(t, dtype=self.dtype)
+                for uid, t in tables_b.items()
             }
             state = self.backend.prepare(psi0)
             out = self.backend.execute_sweep(state, batched, apply_final)
@@ -1380,41 +1384,131 @@ class CompileCache:
     constants AND jitted executables warm, so a serving-style repeat of the
     same circuit skips ILP staging, DP kernelization, stage compilation and
     XLA compilation entirely.
+
+    Thread-safe: every LRU mutation happens under an internal lock (the
+    serving worker pool and ``engine_for`` hit one shared instance
+    concurrently). With ``evict_scan > 1`` eviction is frequency-aware: the
+    victim is the least-*hit* entry among the ``evict_scan`` oldest, so a
+    burst of one-off structures cannot flush a hot warm-pool entry that
+    merely hasn't been touched in the last few requests (the serving
+    :class:`repro.serve.service.WarmPool` opts in; the default is plain
+    LRU). Per-key hit counts persist across eviction/re-admission and feed
+    :meth:`stats`.
     """
 
-    def __init__(self, maxsize: int = 32):
+    def __init__(self, maxsize: int = 32, evict_scan: int = 1):
         self.maxsize = maxsize
+        self.evict_scan = max(1, evict_scan)
         self._d: "OrderedDict[CircuitKey, ExecutionEngine]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.key_hits: Dict[str, int] = {}  # digest -> lifetime hit count
 
     def get(self, key: CircuitKey) -> Optional[ExecutionEngine]:
-        eng = self._d.get(key)
-        if eng is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        self._d.move_to_end(key)
-        return eng
+        with self._lock:
+            eng = self._d.get(key)
+            if eng is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self.key_hits[key.digest] = self.key_hits.get(key.digest, 0) + 1
+            self._d.move_to_end(key)
+            return eng
+
+    def peek(self, key: CircuitKey) -> Optional[ExecutionEngine]:
+        """Counter-neutral lookup — the double-checked inner probe of
+        ``engine_for`` (the outer :meth:`get` already recorded the event, so
+        a second probe must not inflate the miss count)."""
+        with self._lock:
+            return self._d.get(key)
 
     def put(self, key: CircuitKey, engine: ExecutionEngine) -> None:
-        self._d[key] = engine
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = engine
+            self._d.move_to_end(key)
+            self.key_hits.setdefault(key.digest, 0)
+            while len(self._d) > self.maxsize:
+                # victim = coldest (fewest lifetime hits) of the evict_scan
+                # least-recently-used entries; the just-inserted key sits at
+                # the MRU end and is never scanned
+                tail = list(self._d.keys())[
+                    : min(self.evict_scan, len(self._d) - 1)]
+                victim = min(tail, key=lambda k: self.key_hits.get(k.digest, 0))
+                del self._d[victim]
+                self.evictions += 1
 
     def clear(self) -> None:
-        self._d.clear()
-        self.hits = self.misses = 0
+        with self._lock:
+            self._d.clear()
+            self.hits = self.misses = self.evictions = 0
+            self.key_hits.clear()
+
+    def stats(self) -> Dict:
+        """JSON-able counter snapshot (the serving loop and ``bench_serve``
+        both read this): size, hit/miss/eviction totals and per-key hit
+        counts keyed by truncated digest."""
+        with self._lock:
+            return {
+                "size": len(self._d),
+                "maxsize": self.maxsize,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "key_hits": {d[:12]: c for d, c in self.key_hits.items()},
+            }
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def __contains__(self, key: CircuitKey) -> bool:
-        return key in self._d
+        with self._lock:
+            return key in self._d
 
 
 DEFAULT_CACHE = CompileCache()
+
+_BUILD_LOCKS: Dict[Tuple[int, str], threading.Lock] = {}
+_BUILD_LOCKS_GUARD = threading.Lock()
+
+
+def _build_lock(cache: CompileCache, key: CircuitKey) -> threading.Lock:
+    """Per-(cache, key) build lock: two threads missing on the same key must
+    not both pay ILP+DP+XLA — the second waits and takes the cache hit."""
+    with _BUILD_LOCKS_GUARD:
+        if len(_BUILD_LOCKS) > 4096:  # bounded: locks are tiny but not free
+            _BUILD_LOCKS.clear()
+        return _BUILD_LOCKS.setdefault((id(cache), key.digest), threading.Lock())
+
+
+def circuit_key_for(
+    circuit: Circuit,
+    L: int,
+    R: int = 0,
+    G: int = 0,
+    *,
+    backend: str = "pjit",
+    dtype=jnp.complex64,
+    use_pallas: bool = False,
+    peephole: bool = True,
+    staging_method: str = "ilp",
+    kernelize_method: str = "dp",
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    backend_kw: Optional[dict] = None,
+    **plan_kw,
+) -> CircuitKey:
+    """The exact :class:`CircuitKey` :func:`engine_for` would use for these
+    arguments — exposed so warm-pool admission policies (``repro.serve``) can
+    reason about a request's cache key without building anything."""
+    return CircuitKey.make(
+        circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
+        peephole=peephole, staging_method=staging_method,
+        kernelize_method=kernelize_method, cost_model=cost_model,
+        extra=(tuple(sorted((k, _canon(v)) for k, v in plan_kw.items())),
+               _placement_fingerprint(backend_kw)),
+    )
 
 
 def engine_for(
@@ -1455,40 +1549,50 @@ def engine_for(
         return ExecutionEngine(circuit, plan, backend=backend, dtype=dtype,
                                use_pallas=use_pallas, peephole=peephole,
                                **(backend_kw or {}))
-    key = CircuitKey.make(
+    key = circuit_key_for(
         circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
         peephole=peephole, staging_method=staging_method,
         kernelize_method=kernelize_method, cost_model=cost_model,
-        extra=(tuple(sorted((k, _canon(v)) for k, v in plan_kw.items())),
-               _placement_fingerprint(backend_kw)),
+        backend_kw=backend_kw, **plan_kw,
     )
     eng = cache.get(key) if cache is not None else None
     if eng is None:
-        plan = partition(circuit, L, R, G, staging_method=staging_method,
-                         kernelize_method=kernelize_method,
-                         cost_model=cost_model, **plan_kw)
-        eng = ExecutionEngine(circuit, plan, backend=backend, dtype=dtype,
-                              use_pallas=use_pallas, peephole=peephole,
-                              **(backend_kw or {}))
-        if cache is not None:
-            cache.put(key, eng)
-    elif circuit.is_bound and (
-        eng.bound_circuit is None
-        or eng.bound_circuit.binding_signature() != circuit.binding_signature()
-    ):
-        # structural hit with different angles: the dominant serving pattern
-        # (same ansatz, new rotation parameters) — rebind, don't recompile
-        eng.bind_circuit(circuit)
-    elif not circuit.is_bound and (
-        eng.circuit.is_bound
-        or eng.circuit.binding_signature() != circuit.binding_signature()
-    ):
-        # symbolic request hitting an engine whose skeleton is concrete OR
-        # carries different Param names / affine coefficients (the structural
-        # key is deliberately blind to both): adopt the REQUESTED skeleton so
-        # the caller's bind()/run_sweep names and scales resolve correctly;
-        # the current binding is untouched. Adjoint programs wired to the
-        # old skeleton's names/scales are stale — drop them.
-        eng.circuit = circuit
-        eng.__dict__.pop("_adjoint_progs", None)
+        blk = _build_lock(cache, key) if cache is not None else threading.Lock()
+        with blk:
+            # double-checked: a concurrent builder may have landed it
+            # (peek: the outer get already counted this request's miss)
+            eng = cache.peek(key) if cache is not None else None
+            if eng is None:
+                plan = partition(circuit, L, R, G,
+                                 staging_method=staging_method,
+                                 kernelize_method=kernelize_method,
+                                 cost_model=cost_model, **plan_kw)
+                eng = ExecutionEngine(circuit, plan, backend=backend,
+                                      dtype=dtype, use_pallas=use_pallas,
+                                      peephole=peephole, **(backend_kw or {}))
+                if cache is not None:
+                    cache.put(key, eng)
+                return eng
+    with eng.lock:
+        if circuit.is_bound and (
+            eng.bound_circuit is None
+            or eng.bound_circuit.binding_signature() != circuit.binding_signature()
+        ):
+            # structural hit with different angles: the dominant serving
+            # pattern (same ansatz, new rotation parameters) — rebind, don't
+            # recompile
+            eng.bind_circuit(circuit)
+        elif not circuit.is_bound and (
+            eng.circuit.is_bound
+            or eng.circuit.binding_signature() != circuit.binding_signature()
+        ):
+            # symbolic request hitting an engine whose skeleton is concrete OR
+            # carries different Param names / affine coefficients (the
+            # structural key is deliberately blind to both): adopt the
+            # REQUESTED skeleton so the caller's bind()/run_sweep names and
+            # scales resolve correctly; the current binding is untouched.
+            # Adjoint programs wired to the old skeleton's names/scales are
+            # stale — drop them.
+            eng.circuit = circuit
+            eng.__dict__.pop("_adjoint_progs", None)
     return eng

@@ -1,0 +1,529 @@
+"""Serving-layer tests: structure-keyed dynamic batching end to end.
+
+Covers the serving subsystem bottom-up:
+
+* unit: log-bucket histograms / metrics snapshots, power-of-two batch
+  buckets, bounded fair admission queue (backpressure, weighted stride
+  scheduling, same-key harvesting), batcher flush policies (deadline vs
+  size vs drain), compile-cache peek/stats/eviction, warm-pool admission;
+* binding: ``bind_tensors_sweep`` is bit-identical to stacking per-point
+  ``bind_tensors`` tables (including its steady-state batched fast path);
+* service (in-process, real engines): the **oracle** — coalesced batch
+  responses are bit-identical to per-request sequential ``bind(); run()``
+  on the same warm engine — plus concrete-request dedup, steady-state
+  zero-ILP/DP-solve + zero-XLA-retrace load, backpressure rejects with a
+  ``retry_after`` hint, and request-error isolation.
+
+No pytest-asyncio in the image: async scenarios run under ``asyncio.run``.
+The service fixture is module-scoped so the two circuit families compile
+once; each test starts/stops the asyncio loop around the same warm pool.
+"""
+
+import asyncio
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import generators as gen
+from repro.core import kernelization, staging
+from repro.core.generators import PARAM_FAMILIES
+from repro.serve import (
+    ServeConfig,
+    ServiceOverloaded,
+    SimRequest,
+    SimulationService,
+)
+from repro.serve.batcher import DynamicBatcher, bucket_size, group_key_for
+from repro.serve.metrics import Histogram, Metrics
+from repro.serve.queue import FairAdmissionQueue, QueueFull
+from repro.sim.compile import bind_tensors, bind_tensors_sweep
+from repro.sim.engine import CompileCache, circuit_key_for
+
+N = 7  # qubits per family: small enough to compile fast, real engines
+
+
+# --------------------------------------------------------------------------
+# fixtures: one service (and thus one compile per family) for the module
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def svc():
+    return SimulationService(ServeConfig(
+        max_batch_size=8, max_wait_ms=6.0, queue_depth=64, workers=1,
+        cache_size=8))
+
+
+@pytest.fixture(scope="module")
+def fams():
+    out = []
+    for name in ("su2param", "isingparam"):
+        sym = PARAM_FAMILIES[name](N)
+        out.append((name, sym, sym.param_names))
+    return out
+
+
+def _engine(svc, sym, names):
+    req = svc._normalize(SimRequest(circuit=sym,
+                                    params=np.zeros(len(names))))
+    eng, _ = svc.pool.acquire(req)
+    return eng
+
+
+def _warm(svc, fams):
+    """Compile each family and trace every power-of-two sweep bucket plus
+    the single-shot run path (idempotent; cheap once warm)."""
+    for _, sym, names in fams:
+        eng = _engine(svc, sym, names)
+        point = dict(zip(names, np.zeros(len(names))))
+        with eng.lock:
+            b = 1
+            while b <= svc.cfg.max_batch_size:
+                eng.run_sweep(None, [point] * b, apply_final=True)
+                b *= 2
+            eng.bind(point)
+            np.asarray(eng.run(None))
+
+
+def _solves():
+    return (staging.SOLVER_CALLS["ilp"], staging.SOLVER_CALLS["greedy"],
+            kernelization.SOLVER_CALLS["dp"])
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+def test_histogram_percentiles():
+    h = Histogram()
+    for i in range(1, 101):  # 1ms .. 100ms, uniform
+        h.observe(0.001 * i)
+    assert h.count == 100
+    assert h.min == pytest.approx(0.001) and h.max == pytest.approx(0.1)
+    # log buckets: percentile is a bucket geometric midpoint, bounded
+    # relative error (~10% at 96 buckets over 1us..100s)
+    assert 0.038 <= h.percentile(0.50) <= 0.065
+    assert 0.080 <= h.percentile(0.99) <= 0.125
+    assert h.percentile(0.5) <= h.percentile(0.95) <= h.percentile(0.99)
+    snap = h.snapshot()
+    assert snap["count"] == 100 and snap["mean"] == pytest.approx(0.0505)
+    assert Histogram().percentile(0.5) == 0.0  # empty -> 0, not NaN
+
+
+def test_metrics_counters_timers_and_derived_ratios():
+    m = Metrics()
+    m.inc("batches_total", 4)
+    m.inc("requests_executed", 32)
+    m.inc("responses_total", 30)
+    m.inc("rejects_total", 2)
+    with m.timer("execute_s") as t:
+        pass
+    assert t.elapsed >= 0.0
+    assert m.counter("missing") == 0.0
+    snap = m.snapshot()
+    assert snap["coalesce_factor"] == pytest.approx(8.0)
+    assert snap["reject_rate"] == pytest.approx(2 / 32)
+    assert snap["timers"]["execute_s"]["count"] == 1
+
+
+# --------------------------------------------------------------------------
+# batch buckets
+# --------------------------------------------------------------------------
+
+def test_bucket_size_pads_to_pow2_capped():
+    assert [bucket_size(p, 16) for p in (1, 2, 3, 4, 5, 8, 9, 16)] \
+        == [1, 2, 4, 4, 8, 8, 16, 16]
+    assert bucket_size(5, 6) == 6  # cap wins over the pow-2 pad
+    with pytest.raises(AssertionError):
+        bucket_size(17, 16)
+
+
+# --------------------------------------------------------------------------
+# fair admission queue
+# --------------------------------------------------------------------------
+
+def test_queue_backpressure_at_capacity():
+    q = FairAdmissionQueue(capacity=2)
+    q.push("a", tenant="t", key="K")
+    q.push("b", tenant="t", key="K")
+    with pytest.raises(QueueFull) as ei:
+        q.push("c", tenant="t", key="K")
+    assert ei.value.depth == 2 and ei.value.capacity == 2
+    assert len(q) == 2  # the rejected item was not admitted
+
+
+def test_queue_fair_interleave_under_flood():
+    """A tenant that floods the queue only ages its own lane: the light
+    tenant's two requests are served within the first four dequeues even
+    though eight hot requests arrived first."""
+    q = FairAdmissionQueue(capacity=64)
+    for i in range(8):
+        q.push(f"h{i}", tenant="hot", key="K")
+    for i in range(2):
+        q.push(f"l{i}", tenant="light", key="K")
+    order = [q.pop_fair()[1] for _ in range(10)]
+    assert {"l0", "l1"} <= set(order[:4])
+    assert order[:1] == ["h0"]  # FIFO within a lane still holds
+    assert q.pop_fair() is None
+
+
+def test_queue_weighted_fairness():
+    """weight=4 tenant drains ~4x faster: its whole backlog clears while
+    the weight=1 flood has consumed a single slot."""
+    q = FairAdmissionQueue(capacity=64, weights={"light": 4.0})
+    for i in range(8):
+        q.push(f"h{i}", tenant="hot", key="K")
+    for i in range(4):
+        q.push(f"l{i}", tenant="light", key="K")
+    order = [q.pop_fair()[1] for _ in range(6)]
+    assert order[1:5] == ["l0", "l1", "l2", "l3"]
+
+
+def test_queue_take_matching_harvests_only_key():
+    q = FairAdmissionQueue(capacity=16)
+    q.push("a1", tenant="t0", key="A")
+    q.push("b1", tenant="t0", key="B")
+    q.push("a2", tenant="t1", key="A")
+    q.push("a3", tenant="t0", key="A")
+    assert q.take_matching("A", 0) == []
+    got = q.take_matching("A", 2)
+    assert len(got) == 2 and set(got) <= {"a1", "a2", "a3"}
+    assert q.depth == 2
+    # non-matching items kept in FIFO order; remaining A still harvestable
+    assert len(q.take_matching("A", 8)) == 1
+    assert q.pop_fair()[1] == "b1"
+    assert q.tenants() == {}
+
+
+# --------------------------------------------------------------------------
+# batcher flush policies (real queue, no engines)
+# --------------------------------------------------------------------------
+
+def _mkreq(arrival):
+    r = SimRequest(circuit=gen.ghz(2))
+    r.arrival_t = arrival
+    return r
+
+
+def test_batcher_deadline_flush():
+    async def go():
+        q = FairAdmissionQueue(capacity=16)
+        ev = asyncio.Event()
+        b = DynamicBatcher(max_batch_size=8, max_wait_s=0.03)
+        now = time.monotonic()
+        for _ in range(3):
+            q.push(_mkreq(now), tenant="t", key="K")
+        t0 = time.monotonic()
+        batch = await b.form(q, ev)
+        assert batch.flush_reason == "deadline"
+        assert len(batch.requests) == 3 and q.depth == 0
+        assert time.monotonic() - t0 >= 0.015  # actually waited the window
+        assert all(r.picked_t >= now for r in batch.requests)
+    asyncio.run(go())
+
+
+def test_batcher_size_flush_leaves_overflow_queued():
+    async def go():
+        q = FairAdmissionQueue(capacity=16)
+        b = DynamicBatcher(max_batch_size=4, max_wait_s=5.0)
+        now = time.monotonic()
+        for i in range(6):
+            q.push(_mkreq(now), tenant=f"t{i % 2}", key="K")
+        batch = await b.form(q, asyncio.Event())
+        assert batch.flush_reason == "size"
+        assert len(batch.requests) == 4 and q.depth == 2
+    asyncio.run(go())
+
+
+def test_batcher_stale_leader_flushes_immediately():
+    """Deadline anchors at the leader's ARRIVAL: a request that already sat
+    out its wait in a backlog flushes with whatever riders exist."""
+    async def go():
+        q = FairAdmissionQueue(capacity=16)
+        b = DynamicBatcher(max_batch_size=8, max_wait_s=0.05)
+        stale = time.monotonic() - 1.0
+        q.push(_mkreq(stale), tenant="t", key="K")
+        q.push(_mkreq(stale), tenant="t", key="K")
+        t0 = time.monotonic()
+        batch = await b.form(q, asyncio.Event())
+        assert batch.flush_reason == "deadline"
+        assert len(batch.requests) == 2
+        assert time.monotonic() - t0 < 0.04  # no fresh 50ms wait
+    asyncio.run(go())
+
+
+def test_batcher_harvests_only_matching_key_and_drains():
+    async def go():
+        q = FairAdmissionQueue(capacity=16)
+        b = DynamicBatcher(max_batch_size=8, max_wait_s=0.02)
+        now = time.monotonic()
+        q.push(_mkreq(now), tenant="a", key="K")
+        q.push(_mkreq(now), tenant="a", key="J")
+        q.push(_mkreq(now), tenant="b", key="K")
+        batch = await b.form(q, asyncio.Event())
+        assert len(batch.requests) == 2 and q.depth == 1  # J stays queued
+        batch = await b.form(q, asyncio.Event(), draining=True)
+        assert batch.flush_reason == "drain" and len(batch.requests) == 1
+    asyncio.run(go())
+
+
+# --------------------------------------------------------------------------
+# compile cache: counter-neutral peek, stats, eviction policies
+# --------------------------------------------------------------------------
+
+def test_compile_cache_peek_stats_and_frequency_eviction():
+    keys = [circuit_key_for(gen.ghz(n), n) for n in (3, 4, 5)]
+    sentinels = [object(), object(), object()]
+
+    cache = CompileCache(maxsize=2, evict_scan=4)
+    cache.put(keys[0], sentinels[0])
+    # peek never moves counters (it is engine_for's double-checked probe)
+    assert cache.peek(keys[0]) is sentinels[0]
+    assert cache.peek(keys[1]) is None
+    assert cache.hits == 0 and cache.misses == 0
+    assert cache.get(keys[0]) is sentinels[0] and cache.hits == 1
+    cache.put(keys[1], sentinels[1])
+    # frequency-aware eviction: the zero-hit entry goes, the hot one stays
+    cache.put(keys[2], sentinels[2])
+    assert len(cache) == 2 and cache.evictions == 1
+    assert cache.peek(keys[0]) is sentinels[0]
+    assert cache.peek(keys[1]) is None
+    assert cache.peek(keys[2]) is sentinels[2]
+    st = cache.stats()
+    assert st["size"] == 2 and st["evictions"] == 1 and st["hits"] == 1
+    assert st["maxsize"] == 2 and st["misses"] == 0
+
+    # default evict_scan=1 degenerates to strict LRU: recency beats hits
+    lru = CompileCache(maxsize=2)
+    lru.put(keys[0], sentinels[0])
+    lru.get(keys[0])
+    lru.put(keys[1], sentinels[1])
+    lru.put(keys[2], sentinels[2])
+    assert lru.peek(keys[0]) is None  # oldest-touched evicted despite a hit
+    assert lru.peek(keys[1]) is sentinels[1]
+    assert lru.peek(keys[2]) is sentinels[2]
+
+
+def test_warm_pool_admission_doorkeeper(fams):
+    """admit_after=2: the first request of a structure builds a throwaway
+    engine (never pooled); the second pools it; the third hits."""
+    from repro.serve.metrics import Metrics
+    from repro.serve.service import WarmPool
+
+    cfg = ServeConfig(admit_after=2, cache_size=4)
+    pool = WarmPool(cfg, Metrics())
+    _, sym, names = fams[1]  # isingparam: compiled once here, cache_size=4
+    req = SimRequest(circuit=sym, params=np.zeros(len(names)),
+                     L=N, R=0, G=0)
+    e1, hit1 = pool.acquire(req)
+    assert not hit1 and len(pool.cache) == 0
+    assert pool.metrics.counter("cache_admission_denied") == 1
+    e2, hit2 = pool.acquire(req)
+    assert not hit2 and len(pool.cache) == 1
+    e3, hit3 = pool.acquire(req)
+    assert hit3 and e3 is e2
+    assert pool.stats()["xla_compiles"] >= 0  # pooled engines enumerable
+
+
+# --------------------------------------------------------------------------
+# grouping / normalization
+# --------------------------------------------------------------------------
+
+def test_group_key_structure_vs_binding(fams):
+    _, sym, names = fams[0]
+    kw = dict(backend="pjit", use_pallas=False, staging_method="ilp",
+              kernelize_method="dp", dtype=jnp.complex64)
+    mk = lambda **a: SimRequest(L=N, R=0, G=0, **a)
+    k = len(names)
+    # parameterized requests: keyed purely by structure
+    g1 = group_key_for(mk(circuit=sym, params=np.zeros(k)), **kw)
+    g2 = group_key_for(mk(circuit=sym, params=np.ones(k)), **kw)
+    assert g1 == g2 and g1.binding is None
+    # concrete requests: identical bindings dedup, different ones do not
+    p0 = dict(zip(names, np.zeros(k)))
+    p1 = dict(zip(names, np.ones(k)))
+    c1 = group_key_for(mk(circuit=sym.bind(p0)), **kw)
+    c2 = group_key_for(mk(circuit=sym.bind(p0)), **kw)
+    c3 = group_key_for(mk(circuit=sym.bind(p1)), **kw)
+    assert c1 == c2 and c1.binding is not None
+    assert c1 != c3 and c1.digest == c3.digest  # same structure, new angles
+    # packed vs final-remapped execution never shares a call
+    s1 = group_key_for(mk(circuit=sym, params=np.zeros(k), shots=64), **kw)
+    assert s1 != g1 and not s1.wants_state
+
+
+def test_normalize_rejects_inconsistent_binding(svc, fams):
+    _, sym, names = fams[0]
+    with pytest.raises(ValueError, match="free parameters"):
+        svc._normalize(SimRequest(circuit=sym))
+    bound = sym.bind(dict(zip(names, np.zeros(len(names)))))
+    with pytest.raises(ValueError, match="fully-bound"):
+        svc._normalize(SimRequest(circuit=bound,
+                                  params=np.zeros(len(names))))
+    r = svc._normalize(SimRequest(circuit=sym,
+                                  params=np.zeros(len(names))))
+    assert (r.L, r.R, r.G) == (N, 0, 0)  # service default split
+
+
+# --------------------------------------------------------------------------
+# binding: batched sweep tables are bit-identical to per-point tables
+# --------------------------------------------------------------------------
+
+def test_bind_tensors_sweep_matches_per_point_stack(svc, fams):
+    _, sym, names = fams[0]
+    eng = _engine(svc, sym, names)
+    rng = np.random.default_rng(7)
+    pts = [dict(zip(names, rng.uniform(0.1, 6.2, len(names))))
+           for _ in range(5)]
+    circuits = [sym.bind(p) for p in pts]
+    sc = {}
+    # rounds 1-2 run the cross-checked reference path; round 3+ takes the
+    # steady-state batched fast path — all must stay bit-identical
+    for round_ in range(4):
+        batched = bind_tensors_sweep(
+            circuits, eng.plan, dtype=eng.np_dtype, peephole=eng.peephole,
+            expect=eng.cc, struct_cache=sc)
+        per = [bind_tensors(c, eng.plan, dtype=eng.np_dtype,
+                            peephole=eng.peephole, expect=eng.cc,
+                            struct_cache=sc)
+               for c in circuits]
+        assert set(batched) == set(per[0])
+        for uid, tab in batched.items():
+            ref = np.stack([tables[uid] for tables in per])
+            assert tab.dtype == ref.dtype
+            assert np.array_equal(tab, ref), \
+                f"round {round_}: uid {uid} batched != per-point stack"
+    assert sc.get("_sweep_ok", 0) >= 2  # the fast path actually engaged
+
+
+# --------------------------------------------------------------------------
+# service end-to-end (real engines, in-process)
+# --------------------------------------------------------------------------
+
+def test_oracle_coalesced_bit_identical_to_sequential(svc, fams):
+    """THE serving oracle: responses from coalesced batches are exactly —
+    bitwise — the states a request-at-a-time server would have produced by
+    sequential ``bind(point); run()`` on the same warm engine."""
+    async def go():
+        async with svc:
+            _warm(svc, fams)
+            rng = np.random.default_rng(3)
+            reqs, famidx = [], []
+            for i in range(12):
+                _, sym, names = fams[i % 2]
+                reqs.append(SimRequest(
+                    circuit=sym, tenant=f"t{i % 3}",
+                    params=rng.uniform(0.1, 6.2, len(names)),
+                    return_state=True))
+                famidx.append(i % 2)
+            resps = await asyncio.gather(*[svc.submit(r) for r in reqs])
+            assert max(r.batch_size for r in resps) >= 2  # coalescing happened
+            for req, resp, fi in zip(reqs, resps, famidx):
+                _, sym, names = fams[fi]
+                eng = _engine(svc, sym, names)
+                with eng.lock:
+                    eng.bind(dict(zip(names, np.asarray(req.params))))
+                    ref = np.asarray(eng.run(None)).reshape(-1)
+                assert resp.state.shape == ref.shape
+                assert np.array_equal(resp.state, ref), \
+                    f"request {req.request_id}: coalesced != sequential"
+                assert resp.amp0 == complex(ref[0])
+    asyncio.run(go())
+
+
+def test_dedup_identical_concrete_requests_share_one_run(svc, fams):
+    async def go():
+        async with svc:
+            _warm(svc, fams)
+            _, sym, names = fams[0]
+            pt = dict(zip(names, np.linspace(0.2, 1.7, len(names))))
+            bound = sym.bind(pt)
+            reqs = [SimRequest(circuit=bound, tenant=f"t{i % 2}",
+                               return_state=True) for i in range(5)]
+            resps = await asyncio.gather(*[svc.submit(r) for r in reqs])
+            assert all(r.batch_size == 5 for r in resps)  # ONE dedup batch
+            for r in resps[1:]:
+                assert np.array_equal(r.state, resps[0].state)
+            eng = _engine(svc, sym, names)
+            with eng.lock:
+                eng.bind(pt)
+                ref = np.asarray(eng.run(None)).reshape(-1)
+            assert np.array_equal(resps[0].state, ref)
+    asyncio.run(go())
+
+
+def test_serving_steady_state_zero_solves_zero_retraces(svc, fams):
+    """Mixed families/tenants under load: after warmup, NO new ILP/DP
+    solves and NO new XLA traces (pow-2 bucket padding), and the stats
+    snapshot reflects actual coalescing."""
+    async def go():
+        async with svc:
+            _warm(svc, fams)
+            rng = np.random.default_rng(5)
+
+            async def wave():
+                reqs = []
+                for i in range(16):
+                    _, sym, names = fams[i % 2]
+                    reqs.append(SimRequest(
+                        circuit=sym, tenant=f"t{i % 4}",
+                        params=rng.uniform(0.1, 6.2, len(names))))
+                return await asyncio.gather(*[svc.submit(r) for r in reqs])
+
+            await wave()  # warm the service path itself
+            s0, x0 = _solves(), svc.pool.xla_compiles()
+            for _ in range(2):
+                resps = await wave()
+                assert all(r.amp0 is not None and r.result is None
+                           for r in resps)
+                assert all(r.cache_hit for r in resps)
+            assert _solves() == s0, "steady-state serving re-solved ILP/DP"
+            assert svc.pool.xla_compiles() == x0, \
+                "steady-state serving re-traced XLA"
+            st = svc.stats()
+            assert st["coalesce_factor"] > 1.0
+            assert st["queue"]["depth"] == 0
+            assert st["warm_pool"]["size"] == 2  # one engine per family
+            assert st["solver_calls"]["ilp"] == s0[0]
+            assert st["counters"]["responses_total"] >= 48
+    asyncio.run(go())
+
+
+def test_backpressure_rejects_with_retry_after(svc, fams):
+    """Fill the admission queue synchronously (no await -> the scheduler
+    cannot drain between pushes): the next submit is rejected with a
+    positive retry_after, and every admitted request still completes."""
+    async def go():
+        async with svc:
+            _warm(svc, fams)
+            _, sym, names = fams[0]
+            mk = lambda: SimRequest(circuit=sym,
+                                    params=np.zeros(len(names)))
+            depth = svc.cfg.queue_depth
+            futs = [svc.submit_nowait(mk()) for _ in range(depth)]
+            with pytest.raises(ServiceOverloaded) as ei:
+                svc.submit_nowait(mk())
+            assert ei.value.depth == depth
+            assert 0 < ei.value.retry_after <= 5.0
+            resps = await asyncio.gather(*futs)
+            assert len(resps) == depth
+            assert all(r.amp0 is not None for r in resps)
+            assert svc.metrics.counter("rejects_total") >= 1
+            assert svc.metrics.counter("flush_size") >= 1  # full batches
+    asyncio.run(go())
+
+
+def test_request_error_isolated_to_its_batch(svc, fams):
+    async def go():
+        async with svc:
+            _, sym, names = fams[0]
+            with pytest.raises(ValueError, match="binding vector"):
+                await svc.submit(SimRequest(circuit=sym,
+                                            params=np.zeros(3)))
+            assert svc.metrics.counter("batch_errors") >= 1
+            # the service keeps serving after a failed batch
+            resp = await svc.submit(SimRequest(
+                circuit=sym, params=np.zeros(len(names))))
+            assert resp.amp0 is not None
+    asyncio.run(go())
