@@ -21,6 +21,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..sim import faults
 from .circuit import Circuit, Gate
 from .cost_model import FUSION, SHM, CostModel, DEFAULT_COST_MODEL
 
@@ -183,6 +184,8 @@ def kernelize(
     prune_T: int = 500,
 ) -> KernelizationResult:
     SOLVER_CALLS["dp"] += 1
+    if faults._ACTIVE is not None:
+        faults.maybe_inject("dp_solve_error", site="kernelization.kernelize")
     FULL = (1 << n_qubits) - 1
     io_mask = (1 << cm.io_qubits) - 1
 

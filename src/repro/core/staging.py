@@ -23,6 +23,8 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
+from ..sim import faults
+from ..sim.faults import StagingError
 from .circuit import Circuit, Gate
 
 # Module-level solver-call accounting. The parametric serving path asserts
@@ -299,13 +301,18 @@ def solve_ilp(
 
     mat = sp.csr_matrix((vals, (rows, cols)), shape=(r, N))
     t0 = time.time()
-    res = milp(
-        c=obj,
-        constraints=LinearConstraint(mat, np.array(lb), np.array(ub)),
-        integrality=np.ones(N),
-        bounds=Bounds(0, 1),
-        options={"time_limit": time_limit, "presolve": True},
-    )
+    try:
+        res = milp(
+            c=obj,
+            constraints=LinearConstraint(mat, np.array(lb), np.array(ub)),
+            integrality=np.ones(N),
+            bounds=Bounds(0, 1),
+            options={"time_limit": time_limit, "presolve": True},
+        )
+    except Exception as e:
+        # scipy/HiGHS internals must not leak raw to the caller: the
+        # degradation ladder catches StagingError and reruns greedy
+        raise StagingError(f"ILP solver error (s={s}): {e}") from e
     dt = time.time() - t0
     if res.status != 0 or res.x is None:
         return None
@@ -379,6 +386,8 @@ def stage_ilp(
     infeasible s — min Eq. 2 cost among those)."""
     t0 = time.time()
     SOLVER_CALLS["ilp"] += 1
+    if faults._ACTIVE is not None:
+        faults.maybe_inject("ilp_timeout", site="staging.stage_ilp")
     s_lo = stage_count_lower_bound(circuit, L)
     # Alg. 2: scan s upward from the chain lower bound. Probes are
     # feasibility-only (zero objective => the MIP stops at its first
@@ -393,7 +402,7 @@ def stage_ilp(
         best = (s, sol if sol is not None else probe)
         break
     if best is None:
-        raise RuntimeError(f"no feasible staging within {max_stages} stages")
+        raise StagingError(f"no feasible staging within {max_stages} stages")
     s, (stage_of, local_sets, global_sets, stats) = best
     retained, _, _ = _retained_and_edges(circuit)
     per_stage = _attach_insular(circuit, retained, stage_of, s)

@@ -21,9 +21,17 @@ Wire protocol (one JSON object per line):
       "shots": 128, "observables": ["Z0 Z1"], "marginals": [[0, 1]]}
   -> {"id": 2, "circuit_json": "<Circuit.to_json()>"}        (concrete)
   -> {"cmd": "stats"}                                        (snapshot)
-  <- {"id": 1, "ok": true, "amp0": [re, im], "batch_size": 8,
+  <- {"id": 1, "rid": 1, "ok": true, "amp0": [re, im], "batch_size": 8,
       "counts": {...}, "expectations": {...}, "timings": {...}}
-  <- {"id": 9, "ok": false, "error": "overloaded", "retry_after": 0.12}
+  <- {"id": 9, "rid": 9, "ok": false, "error": "overloaded",
+      "message": "...", "retry_after": 0.12}
+
+Error responses are structured: {"rid": <request id or null>, "ok": false,
+"error": <stable code: bad_json | bad_request | overloaded | timeout |
+quarantined>, "message": <human-readable>}. Malformed input (bad JSON, a
+non-object line) gets an error response — it never tears down the
+connection. Per-request "timeout" (seconds) sets a deadline; the
+--request-timeout flag sets the service-wide default.
 """
 
 from __future__ import annotations
@@ -36,7 +44,10 @@ import numpy as np
 
 from ..core.circuit import Circuit
 from ..core.generators import FAMILIES, PARAM_FAMILIES
+from ..sim.faults import FaultError
 from ..serve import (
+    CircuitQuarantined,
+    RequestTimeout,
     ServeConfig,
     ServiceOverloaded,
     SimRequest,
@@ -67,6 +78,8 @@ def config_from_args(args) -> ServeConfig:
         workers=args.workers,
         cache_size=args.cache_size,
         admit_after=args.admit_after,
+        request_timeout_s=args.request_timeout,
+        verify_norm=not args.no_verify_norm,
     )
 
 
@@ -84,6 +97,8 @@ def request_from_json(d: dict) -> SimRequest:
     params = d.get("params")
     if isinstance(params, list):
         params = np.asarray(params, dtype=np.float64)
+    timeout = d.get("timeout")
+    verify = d.get("verify")
     return SimRequest(
         circuit=circ,
         params=params,
@@ -94,12 +109,26 @@ def request_from_json(d: dict) -> SimRequest:
         seed=int(d.get("seed", 0)),
         return_state=bool(d.get("return_state", False)),
         L=d.get("L"), R=d.get("R"), G=d.get("G"),
+        deadline_s=None if timeout is None else float(timeout),
+        verify=None if verify is None else bool(verify),
     )
 
 
+def error_to_json(rid, error: str, message: str, **extra) -> dict:
+    """Structured error shape: every error response carries the request id
+    (``rid``, mirrored as ``id`` for older clients), a stable machine-
+    readable ``error`` code, and a human-readable ``message``."""
+    out = {"id": rid, "rid": rid, "ok": False,
+           "error": error, "message": message}
+    out.update(extra)
+    return out
+
+
 def response_to_json(rid, resp) -> dict:
-    out = {"id": rid, "ok": True, "batch_size": resp.batch_size,
+    out = {"id": rid, "rid": rid, "ok": True, "batch_size": resp.batch_size,
            "cache_hit": resp.cache_hit, "timings": resp.timings}
+    if resp.provenance is not None:
+        out["provenance"] = resp.provenance
     if resp.amp0 is not None:
         out["amp0"] = [resp.amp0.real, resp.amp0.imag]
     if resp.state is not None:
@@ -124,10 +153,17 @@ async def handle_client(svc: SimulationService, reader, writer) -> None:
             resp = await svc.submit(request_from_json(d))
             await send(response_to_json(rid, resp))
         except ServiceOverloaded as e:
-            await send({"id": rid, "ok": False, "error": "overloaded",
-                        "retry_after": e.retry_after})
+            await send(error_to_json(rid, "overloaded", str(e),
+                                     retry_after=e.retry_after))
+        except RequestTimeout as e:
+            await send(error_to_json(rid, "timeout", str(e),
+                                     deadline_s=e.deadline_s))
+        except CircuitQuarantined as e:
+            await send(error_to_json(rid, "quarantined", str(e),
+                                     retry_after=e.retry_after))
         except Exception as e:  # malformed request, unknown family, ...
-            await send({"id": rid, "ok": False, "error": str(e)})
+            await send(error_to_json(rid, "bad_request",
+                                     f"{type(e).__name__}: {e}"))
 
     tasks = set()
     try:
@@ -141,7 +177,13 @@ async def handle_client(svc: SimulationService, reader, writer) -> None:
             try:
                 d = json.loads(line)
             except json.JSONDecodeError as e:
-                await send({"ok": False, "error": f"bad json: {e}"})
+                await send(error_to_json(None, "bad_json", f"bad json: {e}"))
+                continue
+            if not isinstance(d, dict):
+                # a JSON array/scalar line must NOT tear down the connection
+                await send(error_to_json(
+                    None, "bad_request",
+                    f"expected a JSON object, got {type(d).__name__}"))
                 continue
             if d.get("cmd") == "stats":
                 await send({"ok": True, "stats": svc.stats()})
@@ -191,19 +233,24 @@ async def run_demo(args) -> dict:
                 params=rng.uniform(0.1, 6.2, len(names)),
                 shots=args.shots if i % 7 == 0 else 0,
             )
-            return await svc.submit(req)
+            try:
+                return await svc.submit(req)
+            except FaultError as e:  # deadline/quarantine: count, don't crash
+                return e
 
         resps = await asyncio.gather(*[one(i) for i in range(args.requests)])
         stats = svc.stats()
-    sizes = [r.batch_size for r in resps]
-    print(f"demo: {len(resps)} responses, mean batch size "
-          f"{np.mean(sizes):.2f}, coalesce factor "
+    failed = [r for r in resps if isinstance(r, Exception)]
+    resps = [r for r in resps if not isinstance(r, Exception)]
+    sizes = [r.batch_size for r in resps] or [0]
+    print(f"demo: {len(resps)} responses ({len(failed)} rejected), "
+          f"mean batch size {np.mean(sizes):.2f}, coalesce factor "
           f"{stats.get('coalesce_factor', 1.0):.2f}")
     print(json.dumps(stats, indent=2, default=str))
     return stats
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--port", type=int, default=0,
                     help="TCP port for the JSON-lines server (0: demo only)")
@@ -228,7 +275,19 @@ def main(argv=None):
     ap.add_argument("--admit-after", type=int, default=1)
     ap.add_argument("--tenant-weight", action="append", default=[],
                     metavar="NAME=WEIGHT")
-    args = ap.parse_args(argv)
+    # robustness knobs
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="default per-request deadline; expired requests get "
+                         "a typed timeout error (per-request 'timeout' field "
+                         "overrides)")
+    ap.add_argument("--no-verify-norm", action="store_true",
+                    help="disable the post-run ||psi||=~1 integrity guard")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if args.demo or not args.port:
         return asyncio.run(run_demo(args))

@@ -22,6 +22,8 @@ from .batcher import (  # noqa: F401
 from .metrics import Histogram, Metrics  # noqa: F401
 from .queue import FairAdmissionQueue, QueueFull  # noqa: F401
 from .service import (  # noqa: F401
+    CircuitQuarantined,
+    RequestTimeout,
     ServeConfig,
     ServiceOverloaded,
     ServiceStopped,

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import random
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -64,11 +65,14 @@ class SimRequest:
     L: Optional[int] = None  # None -> service default split
     R: Optional[int] = None
     G: Optional[int] = None
+    deadline_s: Optional[float] = None  # None -> service default timeout
+    verify: Optional[bool] = None  # ||psi|| guard; None -> service default
     request_id: int = field(default_factory=lambda: next(_req_ids))
 
     # stamped by the service / batcher (monotonic clock)
     arrival_t: float = 0.0
     picked_t: float = 0.0
+    deadline_t: float = 0.0  # absolute monotonic deadline (0 = none)
 
     @property
     def wants_measure(self) -> bool:
@@ -92,6 +96,10 @@ class SimResponse:
     batch_size: int = 1
     cache_hit: bool = False
     timings: Dict[str, float] = field(default_factory=dict)
+    # engine degradation / integrity-recovery record, present only when the
+    # serving engine ran off its requested configuration (see README
+    # "Robustness")
+    provenance: Optional[Dict] = None
 
 
 @dataclass(frozen=True)
@@ -152,10 +160,17 @@ class DynamicBatcher:
     same structure serialize safely.
     """
 
-    def __init__(self, max_batch_size: int = 16, max_wait_s: float = 0.004):
+    def __init__(self, max_batch_size: int = 16, max_wait_s: float = 0.004,
+                 retry_max: int = 2, retry_base_s: float = 0.01,
+                 retry_cap_s: float = 0.25, verify_norm: bool = True):
         assert max_batch_size >= 1
         self.max_batch_size = max_batch_size
         self.max_wait_s = max_wait_s
+        self.retry_max = retry_max
+        self.retry_base_s = retry_base_s
+        self.retry_cap_s = retry_cap_s
+        self.verify_norm = verify_norm
+        self._backoff_rng = random.Random(0)
 
     # ------------------------------------------------------------- forming
     async def form(self, queue, arrival: asyncio.Event,
@@ -206,21 +221,67 @@ class DynamicBatcher:
             batch.flush_reason = "size"
 
     # ----------------------------------------------------------- execution
-    def execute(self, batch: Batch, pool, metrics) -> List[Tuple[SimRequest, SimResponse]]:
+    def execute(self, batch: Batch, pool,
+                metrics) -> List[Tuple[SimRequest, Union[SimResponse, Exception]]]:
         """Run one coalesced batch: acquire/rebind the engine from the warm
         pool, execute ONE ``run_sweep`` (or one deduplicated run), then
-        measure each request against its own spec. Returns per-request
-        responses in batch order."""
+        measure each request against its own spec. Returns, in batch order,
+        ``(request, SimResponse)`` on success or ``(request, Exception)``
+        when that request failed — a typed error for one request must never
+        poison the rest of its fused batch:
+
+        * a request already past its deadline is rejected with
+          :class:`RequestTimeout` before any work;
+        * transient execution failures (:data:`TRANSIENT_ERRORS`) retry with
+          exponential backoff + jitter;
+        * a fused batch whose shared run fails past retries is **split** —
+          each member re-executes individually so the blast radius of a
+          poison member is that member alone;
+        * when norm verification is on, a non-normalized result triggers the
+          engine's dense-oracle retry; only unrecoverable requests fail
+          (typed :class:`IntegrityError`).
+        """
         import jax
 
+        from ..sim.faults import FaultError, RequestTimeout
         from ..sim.measure import DenseMeasurer, measure_to_result, measurer_for
 
         reqs = batch.requests
-        leader = reqs[0]
-        P = len(reqs)
-        with metrics.timer("bind_s") as t_bind:
-            engine, cache_hit = pool.acquire(leader)
+        errors: Dict[int, Exception] = {}  # request_id -> failure
+
+        # worker-side deadline re-check: queue wait + batch formation may
+        # have consumed the budget since the scheduler's check
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline_t and now >= r.deadline_t:
+                metrics.inc("timeouts_total")
+                errors[r.request_id] = RequestTimeout(
+                    f"request {r.request_id} missed its {r.deadline_s}s "
+                    f"deadline before execution",
+                    request_id=r.request_id, deadline_s=r.deadline_s,
+                    elapsed=now - r.arrival_t)
+            else:
+                live.append(r)
+        if not live:
+            return [(r, errors[r.request_id]) for r in reqs]
+
+        leader = live[0]
+        P = len(live)
+        try:
+            with metrics.timer("bind_s") as t_bind:
+                engine, cache_hit = pool.acquire(leader)
+        except Exception as e:
+            # build failure (post-ladder) or quarantine: fails every live
+            # member of the batch — they all need this engine
+            metrics.inc("acquire_errors")
+            for r in live:
+                errors[r.request_id] = e
+            return [(r, errors[r.request_id]) for r in reqs]
+
+        verify = self._effective_verify(live)
         wants_state = batch.key.wants_state
+        states: Dict[int, object] = {}  # request_id -> state
         with engine.lock:
             # another worker may have rebound the shared engine between our
             # pool.acquire and taking the lock — re-assert the leader's
@@ -228,35 +289,58 @@ class DynamicBatcher:
             self._ensure_binding(engine, leader)
             with metrics.timer("execute_s") as t_exec:
                 if batch.key.binding is not None:
-                    # dedup group: P identical concrete requests, ONE run
-                    out = (engine.run(None) if wants_state
-                           else engine.run_packed(None))
-                    out = jax.block_until_ready(out) \
-                        if not isinstance(out, np.ndarray) else out
-                    states = [out] * P
+                    # dedup group: P identical concrete requests, ONE run.
+                    # Splitting cannot help here — every member is the same
+                    # computation — so a terminal failure fails them all.
+                    try:
+                        out = self._run_with_retry(
+                            lambda: (engine.run(None, verify=verify)
+                                     if wants_state
+                                     else engine.run_packed(None,
+                                                            verify=verify)),
+                            metrics)
+                        out = jax.block_until_ready(out) \
+                            if not isinstance(out, np.ndarray) else out
+                        for r in live:
+                            states[r.request_id] = out
+                    except FaultError as e:
+                        for r in live:
+                            errors[r.request_id] = e
                 else:
-                    points = [self._point(engine, r) for r in reqs]
-                    padded = points + [points[-1]] * (
-                        bucket_size(P, self.max_batch_size) - P)
-                    out = engine.run_sweep(None, padded,
-                                           apply_final=wants_state)
-                    # ONE device->host transfer for the whole batch — slicing
-                    # the device array per request would pay P transfers
-                    out = np.asarray(out) \
-                        if not isinstance(out, np.ndarray) else out
-                    states = [out[i] for i in range(P)]
+                    # per-request binding normalization is the first blast
+                    # wall: a rider with a malformed parameter vector fails
+                    # alone, before it can poison the fused sweep
+                    points: Dict[int, Dict[str, float]] = {}
+                    for r in live:
+                        try:
+                            points[r.request_id] = self._point(engine, r)
+                        except Exception as e:
+                            errors[r.request_id] = e
+                    runnable = [r for r in live if r.request_id in points]
+                    self._run_sweep_isolated(
+                        engine, runnable, points, wants_state, verify,
+                        states, errors, metrics)
             frame = engine.measurement_frame
+            prov = (dict(engine.provenance)
+                    if engine.provenance.get("degraded")
+                    or engine.provenance.get("integrity_retries") else None)
+        if prov is not None:
+            metrics.inc("degraded_responses", P)
         metrics.inc("batches_total")
         metrics.inc("requests_executed", P)
         metrics.inc(f"flush_{batch.flush_reason}")
         metrics.observe("batch_size", P)
 
-        responses = []
+        responses: List[Tuple[SimRequest, Union[SimResponse, Exception]]] = []
         with metrics.timer("measure_s"):
-            for r, st in zip(reqs, states):
+            for r in reqs:
+                if r.request_id in errors:
+                    responses.append((r, errors[r.request_id]))
+                    continue
+                st = states[r.request_id]
                 resp = SimResponse(
                     request_id=r.request_id, tenant=r.tenant,
-                    batch_size=P, cache_hit=cache_hit,
+                    batch_size=P, cache_hit=cache_hit, provenance=prov,
                 )
                 if wants_state:
                     psi = np.asarray(st).reshape(-1)
@@ -287,6 +371,87 @@ class DynamicBatcher:
                 metrics.observe("batch_form_s", resp.timings["batch_form_s"])
                 responses.append((r, resp))
         return responses
+
+    # ------------------------------------------------------ fault handling
+    def _effective_verify(self, reqs: List[SimRequest]) -> bool:
+        """Per-request ``verify`` overrides the service default: any member
+        asking for verification gets it (the guard is batch-wide but only
+        costs a cheap host-side norm per row); the default applies unless
+        every member explicitly opted out."""
+        explicit = [r.verify for r in reqs if r.verify is not None]
+        if any(explicit):
+            return True
+        if explicit and len(explicit) == len(reqs):
+            return False
+        return self.verify_norm
+
+    def _run_with_retry(self, fn, metrics):
+        """Call ``fn`` retrying transient typed failures with exponential
+        backoff (jittered, capped). Non-transient errors propagate at once."""
+        from ..sim.faults import TRANSIENT_ERRORS
+
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except TRANSIENT_ERRORS:
+                if attempt >= self.retry_max:
+                    raise
+                delay = min(self.retry_cap_s,
+                            self.retry_base_s * (1 << attempt))
+                delay *= 0.5 + 0.5 * self._backoff_rng.random()
+                metrics.inc("retries_total")
+                time.sleep(delay)
+                attempt += 1
+
+    def _run_sweep_isolated(self, engine, reqs: List[SimRequest],
+                            points: Dict[int, Dict[str, float]],
+                            wants_state: bool, verify: bool,
+                            states: Dict[int, object],
+                            errors: Dict[int, Exception], metrics) -> None:
+        """Fused sweep with blast-radius isolation: try the coalesced run
+        (with transient retry); if it still fails, re-execute each member
+        individually so one poison member can't fail its batch-mates."""
+        from ..sim.faults import FaultError
+
+        if not reqs:
+            return
+        P = len(reqs)
+        pts = [points[r.request_id] for r in reqs]
+        padded = pts + [pts[-1]] * (bucket_size(P, self.max_batch_size) - P)
+        try:
+            out = self._run_with_retry(
+                lambda: engine.run_sweep(None, padded,
+                                         apply_final=wants_state,
+                                         verify=verify),
+                metrics)
+            # ONE device->host transfer for the whole batch — slicing the
+            # device array per request would pay P transfers
+            out = np.asarray(out) if not isinstance(out, np.ndarray) else out
+            for i, r in enumerate(reqs):
+                states[r.request_id] = out[i]
+            return
+        except FaultError as e:
+            if P == 1:
+                # no batch-mates to shield; record and bail
+                errors[reqs[0].request_id] = e
+                metrics.inc("request_errors_executed")
+                return
+            metrics.inc("split_batches")
+        # blast-radius split: each member re-executes alone (own retry
+        # budget); only members that fail individually get errors
+        for r in reqs:
+            try:
+                out = self._run_with_retry(
+                    lambda p=points[r.request_id]: engine.run_sweep(
+                        None, [p], apply_final=wants_state, verify=verify),
+                    metrics)
+                out = np.asarray(out) \
+                    if not isinstance(out, np.ndarray) else out
+                states[r.request_id] = out[0]
+            except FaultError as e:
+                errors[r.request_id] = e
+                metrics.inc("request_errors_executed")
 
     @staticmethod
     def _ensure_binding(engine, leader: SimRequest) -> None:

@@ -31,9 +31,15 @@ from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
+from ..sim.faults import CircuitQuarantined, FaultError, RequestTimeout
 from .batcher import DynamicBatcher, SimRequest, SimResponse, group_key_for
 from .metrics import Metrics
 from .queue import FairAdmissionQueue, QueueFull
+
+__all__ = [
+    "CircuitQuarantined", "RequestTimeout", "ServeConfig", "ServiceOverloaded",
+    "ServiceStopped", "SimulationService", "WarmPool",
+]
 
 
 class ServiceOverloaded(Exception):
@@ -78,6 +84,14 @@ class ServeConfig:
     cache_size: int = 16
     evict_scan: int = 4
     admit_after: int = 1  # requests of a key before its engine is pooled
+    # robustness (see README "Robustness")
+    request_timeout_s: Optional[float] = None  # default per-request deadline
+    verify_norm: bool = True  # post-run ||psi|| =~ 1 guard (per-request verify= overrides)
+    retry_max: int = 2  # transient-failure retries per execution
+    retry_base_s: float = 0.01  # backoff: min(cap, base * 2^attempt) * jitter
+    retry_cap_s: float = 0.25
+    breaker_threshold: int = 3  # consecutive build failures -> quarantine
+    breaker_ttl_s: float = 30.0  # quarantine duration (then half-open)
 
 
 class WarmPool:
@@ -90,6 +104,14 @@ class WarmPool:
     degenerates to plain insert-always LRU). Eviction inside the cache is
     frequency-aware (least-hit of the LRU tail). Per-key request counts and
     the cache's hit/miss/eviction counters feed :meth:`stats`.
+
+    A per-structure **circuit breaker** guards build time: a structure whose
+    engine build fails ``breaker_threshold`` consecutive times (even after
+    the degradation ladder) is quarantined for ``breaker_ttl_s`` —
+    :meth:`acquire` raises :class:`CircuitQuarantined` (with ``retry_after``)
+    without touching a worker-thread build. After the TTL the breaker is
+    half-open: one build attempt is let through; success closes it, failure
+    re-opens for another TTL.
     """
 
     def __init__(self, cfg: ServeConfig, metrics: Metrics):
@@ -100,12 +122,16 @@ class WarmPool:
         self.cache = CompileCache(maxsize=cfg.cache_size,
                                   evict_scan=cfg.evict_scan)
         self._seen: Dict[str, int] = {}  # digest -> lifetime request count
+        # digest -> {"failures": consecutive build failures, "open_until":
+        # monotonic quarantine expiry (0 = closed)}
+        self._breaker: Dict[str, Dict[str, float]] = {}
         self._lock = threading.Lock()
 
     def acquire(self, req: SimRequest) -> Tuple[object, bool]:
         """Engine for one batch leader: ``(engine, cache_hit)``. Runs on a
         worker thread; compile cost (miss) or rebind cost (hit with new
-        angles) both land in the caller's ``bind_s`` timer."""
+        angles) both land in the caller's ``bind_s`` timer. Raises
+        :class:`CircuitQuarantined` while the structure's breaker is open."""
         from ..sim.engine import circuit_key_for, engine_for
 
         cfg = self.cfg
@@ -115,22 +141,47 @@ class WarmPool:
             staging_method=cfg.staging_method,
             kernelize_method=cfg.kernelize_method,
         )
+        now = time.monotonic()
         with self._lock:
             seen = self._seen.get(key.digest, 0) + 1
             self._seen[key.digest] = seen
+            br = self._breaker.get(key.digest)
+            if br is not None and now < br["open_until"]:
+                self.metrics.inc("breaker_rejects")
+                raise CircuitQuarantined(
+                    f"structure {key.digest[:12]} quarantined after "
+                    f"{int(br['failures'])} consecutive build failures",
+                    digest=key.digest, failures=int(br["failures"]),
+                    retry_after=br["open_until"] - now)
         hit = key in self.cache
         admitted = hit or seen >= self.cfg.admit_after
-        eng = engine_for(
-            req.circuit, req.L, req.R, req.G, backend=cfg.backend,
-            dtype=cfg.dtype, use_pallas=cfg.use_pallas,
-            staging_method=cfg.staging_method,
-            kernelize_method=cfg.kernelize_method,
-            cache=self.cache if admitted else None,
-        )
+        try:
+            eng = engine_for(
+                req.circuit, req.L, req.R, req.G, backend=cfg.backend,
+                dtype=cfg.dtype, use_pallas=cfg.use_pallas,
+                staging_method=cfg.staging_method,
+                kernelize_method=cfg.kernelize_method,
+                cache=self.cache if admitted else None,
+            )
+        except FaultError as e:
+            self._build_failed(key.digest, e)
+            raise
+        with self._lock:
+            self._breaker.pop(key.digest, None)  # success closes the breaker
         self.metrics.inc("cache_hits" if hit else "cache_misses")
         if not admitted:
             self.metrics.inc("cache_admission_denied")
         return eng, hit
+
+    def _build_failed(self, digest: str, err: Exception) -> None:
+        with self._lock:
+            br = self._breaker.setdefault(
+                digest, {"failures": 0, "open_until": 0.0})
+            br["failures"] += 1
+            self.metrics.inc("build_failures")
+            if br["failures"] >= self.cfg.breaker_threshold:
+                br["open_until"] = time.monotonic() + self.cfg.breaker_ttl_s
+                self.metrics.inc("breaker_opened")
 
     def engines(self):
         with self.cache._lock:
@@ -143,9 +194,24 @@ class WarmPool:
 
     def stats(self) -> Dict:
         out = self.cache.stats()
+        now = time.monotonic()
         with self._lock:
             out["requests_by_key"] = {d[:12]: c for d, c in self._seen.items()}
+            out["breaker"] = {
+                d[:12]: {
+                    "failures": int(br["failures"]),
+                    "state": ("open" if now < br["open_until"]
+                              else "half-open"),
+                    "retry_after_s": max(0.0, br["open_until"] - now),
+                }
+                for d, br in self._breaker.items()
+            }
         out["xla_compiles"] = self.xla_compiles()
+        out["degraded_engines"] = [
+            e.provenance for e in self.engines()
+            if getattr(e, "provenance", {}).get("degraded")
+            or getattr(e, "provenance", {}).get("integrity_retries")
+        ]
         return out
 
 
@@ -173,6 +239,10 @@ class SimulationService:
         self.batcher = DynamicBatcher(
             max_batch_size=self.cfg.max_batch_size,
             max_wait_s=self.cfg.max_wait_ms / 1e3,
+            retry_max=self.cfg.retry_max,
+            retry_base_s=self.cfg.retry_base_s,
+            retry_cap_s=self.cfg.retry_cap_s,
+            verify_norm=self.cfg.verify_norm,
         )
         self._futures: Dict[int, asyncio.Future] = {}
         self._arrival: Optional[asyncio.Event] = None
@@ -235,6 +305,8 @@ class SimulationService:
                 f"request {req.request_id}: params given for a fully-bound "
                 "circuit (submit the symbolic skeleton to coalesce)"
             )
+        if req.deadline_s is None:
+            req.deadline_s = cfg.request_timeout_s
         return req
 
     def retry_after(self) -> float:
@@ -265,6 +337,16 @@ class SimulationService:
         )
         self.metrics.inc("requests_total")
         req.arrival_t = time.monotonic()
+        if req.deadline_s is not None:
+            if req.deadline_s <= 0:
+                # a non-positive deadline can never be met — reject before
+                # it consumes queue capacity
+                self.metrics.inc("timeouts_total")
+                raise RequestTimeout(
+                    f"request {req.request_id}: non-positive deadline "
+                    f"{req.deadline_s}s", request_id=req.request_id,
+                    deadline_s=req.deadline_s, elapsed=0.0)
+            req.deadline_t = req.arrival_t + req.deadline_s
         try:
             self.queue.push(req, tenant=req.tenant, key=key)
         except QueueFull as e:
@@ -291,6 +373,11 @@ class SimulationService:
                     self.queue, self._arrival, draining=self._stopping)
             if batch is None:
                 continue
+            # pre-dispatch deadline check: fail already-expired requests here
+            # instead of wasting a worker dispatch on them
+            self._reject_expired(batch)
+            if not batch.requests:
+                continue
             await self._inflight.acquire()
             loop = asyncio.get_running_loop()
             t0 = time.monotonic()
@@ -303,9 +390,31 @@ class SimulationService:
         for _ in range(self.cfg.workers):
             await self._inflight.acquire()
 
+    def _reject_expired(self, batch) -> None:
+        """Drop requests already past their deadline from a formed batch,
+        failing their futures with :class:`RequestTimeout` (runs on the
+        event loop, before worker dispatch)."""
+        now = time.monotonic()
+        live = []
+        for r in batch.requests:
+            if r.deadline_t and now >= r.deadline_t:
+                self.metrics.inc("timeouts_total")
+                fut = self._futures.pop(r.request_id, None)
+                if fut is not None and not fut.done():
+                    fut.set_exception(RequestTimeout(
+                        f"request {r.request_id} missed its {r.deadline_s}s "
+                        f"deadline in queue", request_id=r.request_id,
+                        deadline_s=r.deadline_s, elapsed=now - r.arrival_t))
+            else:
+                live.append(r)
+        batch.requests = live
+
     def _deliver(self, task, batch, t0: float) -> None:
         """Resolve response futures for one executed batch (runs on the
-        event loop — run_in_executor futures call back there)."""
+        event loop — run_in_executor futures call back there). The batcher
+        reports per-request outcomes: a :class:`SimResponse` resolves its
+        future, an :class:`Exception` (typed timeout/quarantine/integrity/
+        build failure) fails only that request's future."""
         self._inflight.release()
         now = time.monotonic()
         dt = now - t0
@@ -314,6 +423,8 @@ class SimulationService:
                             + alpha * dt / max(len(batch.requests), 1))
         exc = task.exception()
         if exc is not None:
+            # infrastructure failure (a bug, not a typed per-request error):
+            # fails the whole batch
             self.metrics.inc("batch_errors")
             for r in batch.requests:
                 fut = self._futures.pop(r.request_id, None)
@@ -322,6 +433,11 @@ class SimulationService:
             return
         for r, resp in task.result():
             fut = self._futures.pop(r.request_id, None)
+            if isinstance(resp, Exception):
+                self.metrics.inc("request_errors")
+                if fut is not None and not fut.done():
+                    fut.set_exception(resp)
+                continue
             e2e = now - r.arrival_t
             resp.timings["e2e_s"] = e2e
             self.metrics.observe("e2e_s", e2e)
@@ -349,4 +465,9 @@ class SimulationService:
             "dp": kernelization.SOLVER_CALLS["dp"],
         }
         snap["retry_after_s"] = self.retry_after()
+        from ..sim import faults
+
+        plan = faults.active()
+        if plan is not None:
+            snap["fault_plan"] = plan.stats()
         return snap

@@ -28,6 +28,7 @@ from ..core.circuit import Circuit, Gate
 from ..core.cost_model import FUSION, SHM
 from ..core.gates import UnboundParameterError
 from ..core.partition import SimulationPlan
+from . import faults
 from .apply import embed_matrix, gather_bits, scatter_bits, specialize_gate
 
 INSULAR_KIND = 2  # kernel.kind for zero-footprint bookkeeping kernels
@@ -223,6 +224,8 @@ def compile_plan(
     per-combo variant indices, and constant gates' embedded matrix stacks —
     so a rebinding pass only re-specializes the parametric gates and redoes
     the value matmuls, in the same order (bit-identical results)."""
+    if faults._ACTIVE is not None:
+        faults.maybe_inject("xla_trace_error", site="compile.compile_plan")
     n, L = plan.n_qubits, plan.L
     programs: List[StageProgram] = []
     flips: Dict[int, int] = {}  # logical qubit -> pending lazy flip (non-local only)

@@ -36,7 +36,9 @@ register it in :data:`BACKENDS`.
 from __future__ import annotations
 
 import hashlib
+import os
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, fields as _dc_fields
 from functools import partial
@@ -53,6 +55,16 @@ from ..core.circuit import Circuit
 from ..core.cost_model import CostModel, DEFAULT_COST_MODEL
 from ..core.gates import UnboundParameterError
 from ..core.partition import SimulationPlan, partition
+from . import faults
+from .faults import (
+    BackendBuildError,
+    FaultError,
+    IntegrityError,
+    KernelizationError,
+    PallasLoweringError,
+    ShardTransferError,
+    StagingError,
+)
 from .compile import (
     CompiledCircuit,
     Op,
@@ -437,6 +449,10 @@ class Backend:
 
     def setup(self, engine: "ExecutionEngine") -> None:
         self.engine = engine
+        # construction-failure injection point (the dense oracle is the
+        # terminal rung of the degradation ladder and stays injection-free)
+        if faults._ACTIVE is not None and self.name != "dense":
+            faults.maybe_inject("xla_trace_error", site=f"{self.name}.setup")
 
     def on_rebind(self) -> None:
         """Called after the engine swaps in a new parameter binding (the
@@ -497,8 +513,12 @@ class PjitBackend(Backend):
             mesh = self.mesh
             gsize = int(np.prod([mesh.shape[a] for a in self.global_axes])) if self.global_axes else 1
             rsize = int(np.prod([mesh.shape[a] for a in self.regional_axes])) if self.regional_axes else 1
-            assert gsize == (1 << G), f"pod devices {gsize} != 2^G={1 << G}"
-            assert rsize == (1 << R), f"ICI devices {rsize} != 2^R={1 << R}"
+            if gsize != (1 << G):
+                raise BackendBuildError(
+                    f"pjit mesh mismatch: pod devices {gsize} != 2^G={1 << G}")
+            if rsize != (1 << R):
+                raise BackendBuildError(
+                    f"pjit mesh mismatch: ICI devices {rsize} != 2^R={1 << R}")
             self.sharding = NamedSharding(
                 mesh,
                 P(
@@ -661,7 +681,10 @@ class ShardMapBackend(Backend):
         n, L = engine.n, engine.L
         nb = engine.R + engine.G
         devices = self.devices if self.devices is not None else jax.devices()
-        assert len(devices) >= (1 << nb), f"need {1 << nb} devices, have {len(devices)}"
+        if len(devices) < (1 << nb):
+            raise BackendBuildError(
+                f"shard_map bit-mesh needs {1 << nb} devices, "
+                f"have {len(devices)}")
         devs = np.array(devices[: 1 << nb]).reshape((2,) * nb if nb else (1,))
         self.axis_names = tuple(f"b{p}" for p in range(n - 1, L - 1, -1)) or ("b_dummy",)
         self.mesh = Mesh(devs, self.axis_names)
@@ -807,8 +830,12 @@ class HostOffloadBackend(Backend):
 
     name = "offload"
 
-    def __init__(self, jit_cache_size: int = 64):
+    def __init__(self, jit_cache_size: int = 64,
+                 checkpoint_dir: Optional[str] = None):
         self.jit_cache = JitCache(maxsize=jit_cache_size)
+        # opt-in stage checkpointing: journal + state snapshot after every
+        # completed stage so a killed long-run resumes instead of restarting
+        self.checkpoint_dir = checkpoint_dir
 
     def setup(self, engine: "ExecutionEngine") -> None:
         super().setup(engine)
@@ -819,6 +846,9 @@ class HostOffloadBackend(Backend):
             "tensor_slice_reuse": 0,  # per-shard slices served from device
             "overlapped_dispatches": 0,  # shard s+1 in flight while s drains
             "memory_passes": 0,  # device HBM passes (top-level op count)
+            "checkpointed_stages": 0,  # stage snapshots written (opt-in)
+            "resumed_stages": 0,  # stages skipped on the last resume
+            "straggler_stages": 0,  # stages flagged by the EWMA monitor
         }
         self._uploaded: set = set()  # op uids whose tensor reached the device
         self._dev_slices: Dict = {}  # (op.uid, combo) -> device slice
@@ -885,6 +915,8 @@ class HostOffloadBackend(Backend):
     def _stream_stage(self, state: np.ndarray, prog: StageProgram) -> np.ndarray:
         eng = self.engine
         L = eng.L
+        if faults._ACTIVE is not None:
+            faults.maybe_inject("slow_stage", site="offload.stage")
         batched = state.ndim == 2
         fn = self.shard_fn(_op_sig(prog.ops), batched=batched,
                            sweep=self._sweep_consts is not None)
@@ -896,6 +928,9 @@ class HostOffloadBackend(Backend):
         # (donated ping-pong buffers: fn donates its input shard)
         pending = None  # (shard_id, in-flight device result)
         for s in range(n_shards):
+            if faults._ACTIVE is not None:
+                faults.maybe_inject("shard_transfer_error",
+                                    site=f"offload.shard{s}")
             lo, hi = s << L, (s + 1) << L
             tensors = [self.resolve(op, s) for op in flat]
             block = np.ascontiguousarray(state[..., lo:hi])
@@ -937,10 +972,81 @@ class HostOffloadBackend(Backend):
         return state
 
     def execute(self, state, apply_final: bool = True):
+        if self.checkpoint_dir is not None and state.ndim == 1:
+            return self._execute_checkpointed(state, apply_final)
         return self.engine.stage_loop(state, self._stream_stage, self._remap, apply_final)
 
     def execute_batch(self, states, apply_final: bool = True):
         return self.execute(states, apply_final)  # primitives are batch-aware
+
+    # -------------------------------------------------- stage checkpointing
+    def _run_sig(self, state: np.ndarray) -> str:
+        """Identity of one run: structure + binding + initial state. A
+        journal written under a different signature is ignored (never
+        resumed into the wrong run)."""
+        eng = self.engine
+        h = hashlib.sha256()
+        h.update(repr(eng.circuit.structure_fingerprint()).encode())
+        h.update(repr(eng.bound_circuit.binding_signature()).encode())
+        h.update(repr((eng.n, eng.L, eng.R, eng.G, str(eng.np_dtype))).encode())
+        h.update(state.tobytes())
+        return h.hexdigest()
+
+    @staticmethod
+    def _save_state(path: str, state: np.ndarray) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.save(f, state)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def _execute_checkpointed(self, state: np.ndarray, apply_final: bool):
+        """The stage loop with durability: after each completed stage unit
+        (ops + inter-stage remap) the host state is snapshotted (fsync'd
+        tmp+rename) and the :class:`repro.train.fault_tolerance.RunJournal`
+        records the stage index; per-stage wall times feed a
+        :class:`StragglerMonitor`. On entry, a journal whose run signature
+        matches resumes from the last completed stage. A completed run
+        clears its checkpoint so stale state can never leak into a later
+        run."""
+        from ..train.fault_tolerance import RunJournal, StragglerMonitor
+
+        cc = self.engine.cc
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        sig = self._run_sig(state)
+        jpath = os.path.join(self.checkpoint_dir, "journal.json")
+        spath = os.path.join(self.checkpoint_dir, "state.npy")
+        journal = RunJournal(jpath)
+        rec = journal.read()
+        start = 0
+        if (rec.get("run_sig") == sig and rec.get("last_step", -1) >= 0
+                and os.path.exists(spath)):
+            state = np.load(spath).astype(self.engine.np_dtype, copy=True)
+            start = int(rec["last_step"]) + 1
+            journal.mark_restart()
+            self.stats["resumed_stages"] = start
+        monitor = StragglerMonitor()
+        for i, prog in enumerate(cc.programs):
+            if i < start:
+                continue
+            if i == 0 and cc.initial_remap is not None:
+                state = self._remap(state, "init", cc.initial_remap)
+            t0 = time.monotonic()
+            state = self._stream_stage(state, prog)
+            if prog.remap_after is not None:
+                state = self._remap(state, i, prog.remap_after)
+            if monitor.record(i, time.monotonic() - t0):
+                self.stats["straggler_stages"] += 1
+            self._save_state(spath, state)
+            journal.update(i, run_sig=sig)
+            self.stats["checkpointed_stages"] += 1
+        if apply_final and cc.final_remap is not None:
+            state = self._remap(state, "final", cc.final_remap)
+        for p in (jpath, spath):  # completed: drop the checkpoint
+            if os.path.exists(p):
+                os.remove(p)
+        return state
 
     def supports_fused_sweep(self) -> bool:
         return True
@@ -1042,6 +1148,13 @@ class ExecutionEngine:
         self.np_dtype = np.dtype(dtype)
         self.use_pallas = use_pallas
         self.peephole = peephole
+        # degradation provenance: :func:`build_engine` records every ladder
+        # downgrade here; the integrity guard counts its retries here too.
+        # Surfaced by the serving stats / bench JSON so silent degradation
+        # is impossible.
+        self.provenance: Dict = {"degraded": False}
+        if use_pallas and faults._ACTIVE is not None:
+            faults.maybe_inject("pallas_lowering_error", site="engine.init")
         self.cc: CompiledCircuit = (
             compiled if compiled is not None
             else compile_plan(circuit, plan, dtype=self.np_dtype, peephole=peephole)
@@ -1074,6 +1187,8 @@ class ExecutionEngine:
             raise TypeError("backend_kw only apply when backend is given by name")
         self.backend = backend
         backend.setup(self)
+        self.provenance["backend"] = backend.name
+        self.provenance["use_pallas"] = use_pallas
 
     # --------------------------------------------------------- parameters
     @property
@@ -1150,18 +1265,85 @@ class ExecutionEngine:
             x = remap_fn(x, "final", cc.final_remap)
         return x
 
+    # --------------------------------------------------- integrity guard
+    def dense_reference(self, bound: Optional[Circuit] = None, psi0=None,
+                        apply_final: bool = True) -> np.ndarray:
+        """Per-gate dense oracle state for ``bound`` (defaults to the
+        current binding) — the integrity guard's one-retry path. With
+        ``apply_final=False`` the result is re-stored in the compiled
+        frame's physical order (comparable to ``run_packed`` output)."""
+        from .statevector import simulate
+
+        bound = self.bound_circuit if bound is None else bound
+        psi = np.asarray(simulate(bound, psi0=psi0, dtype=self.dtype)).reshape(-1)
+        if not apply_final:
+            frame = self.measurement_frame
+            idx = frame.phys_to_logical(np.arange(psi.size, dtype=np.int64))
+            psi = psi[idx]
+        return psi
+
+    @staticmethod
+    def _norm_ok(arr: np.ndarray, expected: float, rtol: float = 1e-2) -> bool:
+        if not np.all(np.isfinite(arr)):
+            return False
+        return abs(float(np.linalg.norm(arr)) - expected) <= rtol * max(expected, 1e-30)
+
+    @staticmethod
+    def _expected_norm(psi0) -> float:
+        if psi0 is None:
+            return 1.0
+        return float(np.linalg.norm(np.asarray(psi0).reshape(-1)))
+
+    def _guard(self, out, psi0, apply_final: bool = True,
+               bound: Optional[Circuit] = None):
+        """Post-run ||psi|| =~ 1 check: unitary evolution preserves the
+        input norm, so a NaN/denormal blowup is detectable in one cheap
+        pass. On failure, retry ONCE against the dense per-gate oracle; if
+        even that is poisoned, raise a typed :class:`IntegrityError`."""
+        arr = np.asarray(out).reshape(-1)
+        expected = self._expected_norm(psi0)
+        if self._norm_ok(arr, expected):
+            return out
+        self.provenance["integrity_retries"] = (
+            self.provenance.get("integrity_retries", 0) + 1)
+        ref = self.dense_reference(bound=bound, psi0=psi0,
+                                   apply_final=apply_final)
+        if not self._norm_ok(ref, expected):
+            raise IntegrityError(
+                f"state norm {float(np.linalg.norm(arr)):.6g} != "
+                f"{expected:.6g} and the dense-oracle retry is also "
+                f"poisoned — numerically corrupt circuit/binding")
+        self.provenance["integrity_recovered"] = (
+            self.provenance.get("integrity_recovered", 0) + 1)
+        return ref
+
+    @staticmethod
+    def _poison(out) -> np.ndarray:
+        arr = np.array(np.asarray(out), copy=True)
+        arr.reshape(-1)[0] = np.nan
+        return arr
+
     # ---------------------------------------------------------------- api
-    def run(self, psi0=None, params=None):
+    def run(self, psi0=None, params=None, *, verify: bool = False):
         """psi0: flat [2^n] in logical order (defaults to |0..0>). Returns
         the final flat state in logical order. ``params`` (optional) rebinds
-        the circuit parameters first — a tensor swap, never a recompile."""
+        the circuit parameters first — a tensor swap, never a recompile.
+        ``verify`` turns on the post-run norm integrity guard (NaN blowups
+        become one dense-oracle retry, then a typed IntegrityError)."""
         if params is not None:
             self.bind(params)
         self._require_bound()
+        if faults._ACTIVE is not None:
+            faults.maybe_inject("slow_stage", site="engine.run")
         state = self.backend.prepare(psi0)
-        return self.backend.extract(self.backend.execute(state, True))
+        out = self.backend.extract(self.backend.execute(state, True))
+        if faults._ACTIVE is not None and faults.should_corrupt("engine.run"):
+            out = self._poison(out)
+        if verify:
+            out = self._guard(out, psi0, apply_final=True)
+        return out
 
-    def run_packed(self, psi0=None, params=None):
+    def run_packed(self, psi0=None, params=None, *, verify: bool = False):
         """Run but *skip the final inter-stage remap*: returns the state in
         the last stage's physical layout (with lazy flips still pending).
         Pair with :attr:`measurement_frame` and :mod:`repro.sim.measure` —
@@ -1170,7 +1352,14 @@ class ExecutionEngine:
         if params is not None:
             self.bind(params)
         self._require_bound()
-        return self.backend.execute(self.backend.prepare(psi0), False)
+        if faults._ACTIVE is not None:
+            faults.maybe_inject("slow_stage", site="engine.run")
+        out = self.backend.execute(self.backend.prepare(psi0), False)
+        if faults._ACTIVE is not None and faults.should_corrupt("engine.run"):
+            out = self._poison(out)
+        if verify:
+            out = self._guard(out, psi0, apply_final=False)
+        return out
 
     def run_batch(self, psi0s, apply_final: bool = True):
         """Run a batch of initial states ``psi0s: [B, 2^n]`` through the
@@ -1182,7 +1371,8 @@ class ExecutionEngine:
         out = self.backend.execute_batch(states, apply_final)
         return self.backend.extract(out, batch=True) if apply_final else out
 
-    def run_sweep(self, psi0, params_batch, apply_final: bool = True):
+    def run_sweep(self, psi0, params_batch, apply_final: bool = True,
+                  *, verify: bool = False):
         """Run ONE initial state against a batch of parameter bindings.
 
         ``params_batch``: a ``[P, n_params]`` array (columns ordered by
@@ -1199,6 +1389,8 @@ class ExecutionEngine:
         if not points:
             raise ValueError("empty params_batch")
         if self.backend.supports_fused_sweep():
+            if faults._ACTIVE is not None:
+                faults.maybe_inject("slow_stage", site="engine.run_sweep")
             tables_b = bind_tensors_sweep(
                 [self.circuit.bind(pt) for pt in points], self.plan,
                 dtype=self.np_dtype, peephole=self.peephole,
@@ -1209,15 +1401,54 @@ class ExecutionEngine:
             }
             state = self.backend.prepare(psi0)
             out = self.backend.execute_sweep(state, batched, apply_final)
-            return self.backend.extract(out, batch=True) if apply_final else out
-        outs = []
-        for pt in points:
-            self.bind(pt)
-            out = self.run(psi0) if apply_final else self.run_packed(psi0)
-            outs.append(np.asarray(out).reshape(-1) if apply_final else out)
-        if apply_final:
-            return np.stack(outs)
-        return jnp.stack(outs) if not isinstance(outs[0], np.ndarray) else np.stack(outs)
+            out = self.backend.extract(out, batch=True) if apply_final else out
+        else:
+            outs = []
+            for pt in points:
+                self.bind(pt)
+                o = self.run(psi0) if apply_final else self.run_packed(psi0)
+                outs.append(np.asarray(o).reshape(-1) if apply_final else o)
+            if apply_final or isinstance(outs[0], np.ndarray):
+                out = np.stack(outs)
+            else:
+                out = jnp.stack(outs)
+        if faults._ACTIVE is not None and faults.should_corrupt("engine.run_sweep"):
+            out = self._poison_row(out, len(points))
+        if verify:
+            out = self._guard_sweep(out, psi0, points, apply_final)
+        return out
+
+    def _poison_row(self, out, n_rows: int) -> np.ndarray:
+        arr = np.array(np.asarray(out), copy=True)
+        plan = faults._ACTIVE
+        row = plan._rng.randrange(n_rows) if plan is not None else 0
+        arr.reshape(arr.shape[0], -1)[row, 0] = np.nan
+        return arr
+
+    def _guard_sweep(self, out, psi0, points, apply_final: bool):
+        """Per-row norm guard for a sweep: only poisoned rows pay the
+        dense-oracle retry; a row whose oracle is also poisoned raises."""
+        arr = np.asarray(out)
+        flat = arr.reshape(arr.shape[0], -1)
+        expected = self._expected_norm(psi0)
+        bad = [i for i in range(len(points))
+               if not self._norm_ok(flat[i], expected)]
+        if not bad:
+            return out
+        arr = np.array(arr, copy=True)
+        self.provenance["integrity_retries"] = (
+            self.provenance.get("integrity_retries", 0) + len(bad))
+        for i in bad:
+            ref = self.dense_reference(bound=self.circuit.bind(points[i]),
+                                       psi0=psi0, apply_final=apply_final)
+            if not self._norm_ok(ref, expected):
+                raise IntegrityError(
+                    f"sweep row {i}: norm check failed and the dense-oracle "
+                    f"retry is also poisoned")
+            arr.reshape(arr.shape[0], -1)[i] = ref
+        self.provenance["integrity_recovered"] = (
+            self.provenance.get("integrity_recovered", 0) + len(bad))
+        return arr
 
     # ---------------------------------------------------- adjoint gradients
     def adjoint_program(self, observable):
@@ -1511,6 +1742,128 @@ def circuit_key_for(
     )
 
 
+# ======================================================================
+# Graceful degradation ladder
+# ======================================================================
+
+#: Backend fallback chain: construction failure walks down until the dense
+#: per-gate oracle, which cannot fail to build.
+BACKEND_CHAIN: Dict[str, Tuple[str, ...]] = {
+    "shardmap": ("pjit", "dense"),
+    "pjit": ("dense",),
+    "offload": ("dense",),
+    "dense": (),
+}
+
+
+def _record_fallback(prov: Dict, from_: str, to: str, err: Exception) -> None:
+    prov["degraded"] = True
+    prov.setdefault("fallbacks", []).append({
+        "from": from_, "to": to,
+        "error": f"{type(err).__name__}: {err}",
+    })
+
+
+def _plan_resilient(circuit, L, R, G, *, staging_method, kernelize_method,
+                    cost_model, provenance, **plan_kw):
+    """Partition with the planning rungs of the ladder: a typed
+    :class:`StagingError` retries with ``stage_greedy``, a typed
+    :class:`KernelizationError` retries with greedy packing. Returns
+    ``(plan, staging_method, kernelize_method)`` actually used."""
+    sm, km = staging_method, kernelize_method
+    while True:
+        try:
+            plan = partition(circuit, L, R, G, staging_method=sm,
+                             kernelize_method=km, cost_model=cost_model,
+                             **plan_kw)
+            return plan, sm, km
+        except StagingError as e:
+            if sm == "greedy":
+                raise
+            _record_fallback(provenance, f"staging:{sm}", "staging:greedy", e)
+            sm = "greedy"
+        except KernelizationError as e:
+            if km == "greedy":
+                raise
+            _record_fallback(provenance, f"kernelize:{km}",
+                             "kernelize:greedy", e)
+            km = "greedy"
+
+
+def build_engine(
+    circuit: Circuit,
+    plan: SimulationPlan,
+    *,
+    backend: str = "pjit",
+    dtype=jnp.complex64,
+    use_pallas: bool = False,
+    peephole: bool = True,
+    backend_kw: Optional[dict] = None,
+    degrade: bool = True,
+    provenance: Optional[Dict] = None,
+) -> ExecutionEngine:
+    """Construct an :class:`ExecutionEngine`, walking the graceful-
+    degradation ladder on *typed* construction failures:
+
+    1. a transient ``compile_plan`` failure gets ONE retry (then the typed
+       error propagates — persistent structural poison must not loop);
+    2. a :class:`PallasLoweringError` retries the same backend with
+       ``use_pallas=False``;
+    3. a :class:`BackendBuildError` (mesh/device mismatch, trace failure)
+       falls down :data:`BACKEND_CHAIN` to the dense per-gate oracle.
+
+    Every downgrade lands in ``engine.provenance`` (``degraded``,
+    ``fallbacks``, ``requested_backend``). With ``degrade=False`` the first
+    typed error propagates unchanged."""
+    prov: Dict = provenance if provenance is not None else {}
+    cc = None
+    compile_err: Optional[FaultError] = None
+    for attempt in range(2 if degrade else 1):
+        try:
+            cc = compile_plan(circuit, plan, dtype=np.dtype(dtype),
+                              peephole=peephole)
+            if attempt:
+                _record_fallback(prov, "compile", "compile(retry)", compile_err)
+            break
+        except FaultError as e:
+            compile_err = e
+    if cc is None:
+        raise compile_err
+
+    attempts: List[Tuple[str, bool, dict]] = [(backend, use_pallas,
+                                               backend_kw or {})]
+    if degrade:
+        if use_pallas:
+            attempts.append((backend, False, backend_kw or {}))
+        for nb in BACKEND_CHAIN.get(backend, ()):
+            # degraded rungs drop placement kwargs: a mesh built for the
+            # requested backend has no meaning one rung down
+            attempts.append((nb, False, {}))
+    last: Optional[Exception] = None
+    for bk, pl, kw in attempts:
+        try:
+            eng = ExecutionEngine(circuit, plan, backend=bk, dtype=dtype,
+                                  use_pallas=pl, peephole=peephole,
+                                  compiled=cc, **kw)
+        except FaultError as e:
+            last = e
+            nxt = None
+            for j, (b2, p2, _) in enumerate(attempts):
+                if (b2, p2) == (bk, pl) and j + 1 < len(attempts):
+                    nxt = attempts[j + 1]
+                    break
+            to = (f"{nxt[0]}{'+pallas' if nxt[1] else ''}"
+                  if nxt else "<exhausted>")
+            _record_fallback(prov, f"{bk}{'+pallas' if pl else ''}", to, e)
+            continue
+        if prov.get("degraded"):
+            eng.provenance.update(prov)
+            eng.provenance["requested_backend"] = backend
+            eng.provenance["requested_use_pallas"] = use_pallas
+        return eng
+    raise last if last is not None else BackendBuildError("no backend attempts")
+
+
 def engine_for(
     circuit: Circuit,
     L: int,
@@ -1527,6 +1880,7 @@ def engine_for(
     cache: Optional[CompileCache] = DEFAULT_CACHE,
     plan: Optional[SimulationPlan] = None,
     backend_kw: Optional[dict] = None,
+    degrade: bool = True,
     **plan_kw,
 ) -> ExecutionEngine:
     """The serving entry point: partition + compile + build an engine, or
@@ -1546,9 +1900,9 @@ def engine_for(
     share a cached engine.
     """
     if plan is not None:
-        return ExecutionEngine(circuit, plan, backend=backend, dtype=dtype,
-                               use_pallas=use_pallas, peephole=peephole,
-                               **(backend_kw or {}))
+        return build_engine(circuit, plan, backend=backend, dtype=dtype,
+                            use_pallas=use_pallas, peephole=peephole,
+                            backend_kw=backend_kw, degrade=degrade)
     key = circuit_key_for(
         circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
         peephole=peephole, staging_method=staging_method,
@@ -1563,13 +1917,21 @@ def engine_for(
             # (peek: the outer get already counted this request's miss)
             eng = cache.peek(key) if cache is not None else None
             if eng is None:
-                plan = partition(circuit, L, R, G,
-                                 staging_method=staging_method,
-                                 kernelize_method=kernelize_method,
-                                 cost_model=cost_model, **plan_kw)
-                eng = ExecutionEngine(circuit, plan, backend=backend,
-                                      dtype=dtype, use_pallas=use_pallas,
-                                      peephole=peephole, **(backend_kw or {}))
+                prov: Dict = {}
+                if degrade:
+                    plan, _, _ = _plan_resilient(
+                        circuit, L, R, G, staging_method=staging_method,
+                        kernelize_method=kernelize_method,
+                        cost_model=cost_model, provenance=prov, **plan_kw)
+                else:
+                    plan = partition(circuit, L, R, G,
+                                     staging_method=staging_method,
+                                     kernelize_method=kernelize_method,
+                                     cost_model=cost_model, **plan_kw)
+                eng = build_engine(circuit, plan, backend=backend,
+                                   dtype=dtype, use_pallas=use_pallas,
+                                   peephole=peephole, backend_kw=backend_kw,
+                                   degrade=degrade, provenance=prov)
                 if cache is not None:
                     cache.put(key, eng)
                 return eng

@@ -53,20 +53,26 @@ class RunJournal:
         with open(self.path) as f:
             return json.load(f)
 
+    def _write(self, d: Dict) -> None:
+        # tmp + fsync + rename: os.replace alone is NOT crash-safe — after a
+        # power loss the rename can survive while the data blocks don't,
+        # leaving a truncated/empty journal. fsync the tmp file first so the
+        # rename only ever publishes durable bytes.
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(d, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+
     def update(self, step: int, **extra) -> None:
         d = self.read()
         d["last_step"] = step
         d.update(extra)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(d, f)
-        os.replace(tmp, self.path)
+        self._write(d)
 
     def mark_restart(self) -> int:
         d = self.read()
         d["restarts"] = d.get("restarts", 0) + 1
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(d, f)
-        os.replace(tmp, self.path)
+        self._write(d)
         return d["restarts"]
