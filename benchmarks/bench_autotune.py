@@ -1,0 +1,123 @@
+"""Plan-autotuning benchmark: A/B-replay candidate plans, verify the win.
+
+For each circuit family this harness:
+
+1. builds + times the **analytic-default** plan (cold engine, default
+   knobs, warm best-of-N replay);
+2. runs :func:`repro.core.autotune.autotune_engine` over the standard
+   candidate sweep (kernelizer method, fusion-size caps, ILP comm weights,
+   calibrated-vs-analytic cost model);
+3. re-times the tuned winner end-to-end and asserts it is **never slower**
+   than the default (small noise tolerance) — the default is itself a
+   candidate, so the tuner can at worst tie;
+4. asserts the tuned plan is **cached**: a fresh default-knob
+   ``engine_for`` call afterwards performs ZERO ILP/DP solves and ZERO XLA
+   retraces (the plan-alias contract).
+
+``improvement_pct`` per family feeds ``run.py --json``; the acceptance bar
+is >= 10% on at least one family.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import kernelization, staging
+from repro.core.autotune import autotune_engine, default_candidates
+from repro.core.generators import FAMILIES
+from repro.sim.engine import CompileCache, engine_for
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        if not isinstance(out, np.ndarray):
+            out.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10)
+    ap.add_argument("--L", type=int, default=8)
+    ap.add_argument("--R", type=int, default=2)
+    ap.add_argument("--repeats", type=int, default=7)
+    ap.add_argument("--backend", default="pjit",
+                    choices=["pjit", "shardmap", "offload", "dense"])
+    ap.add_argument("--families", default="qft,su2random,vqc")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("family,default_us,tuned_us,improvement_pct,chosen,tune_s,"
+          "warm_solves,warm_retraces")
+    for fam in args.families.split(","):
+        circ = FAMILIES[fam](args.n)
+        cache = CompileCache(maxsize=8)
+
+        # -- baseline: default knobs, warmed, best-of-N
+        base_eng = engine_for(circ, args.L, args.R, 0, backend=args.backend,
+                              cache=cache)
+        base_eng.run()  # pay the trace
+        default_s = _best_of(lambda: base_eng.run(), args.repeats)
+
+        # -- tune (replays every candidate; winner aliased into `cache`)
+        res = autotune_engine(circ, args.L, args.R, 0, backend=args.backend,
+                              repeats=args.repeats, warmup=2, cache=cache,
+                              force=True)
+
+        # -- warm default-knob request must hit the tuned alias: zero solves
+        solves0 = (staging.SOLVER_CALLS["ilp"], staging.SOLVER_CALLS["greedy"],
+                   kernelization.SOLVER_CALLS["dp"])
+        tuned_eng = engine_for(circ, args.L, args.R, 0, backend=args.backend,
+                               cache=cache)
+        solves1 = (staging.SOLVER_CALLS["ilp"], staging.SOLVER_CALLS["greedy"],
+                   kernelization.SOLVER_CALLS["dp"])
+        warm_solves = sum(b - a for a, b in zip(solves0, solves1))
+        assert warm_solves == 0, "tuned plan must be cached: no ILP/DP solves"
+        assert tuned_eng is res.engine, "warm engine_for must return the winner"
+        xla0 = tuned_eng.xla_compiles
+        tuned_eng.run()
+        tuned_s = _best_of(lambda: tuned_eng.run(), args.repeats)
+        warm_retraces = tuned_eng.xla_compiles - xla0
+        assert warm_retraces == 0, "tuned replay must not retrace XLA"
+
+        # never slower than default (5% timer-noise allowance: the default
+        # is itself a candidate, so the tuner can at worst tie)
+        assert tuned_s <= default_s * 1.05, (
+            f"{fam}: tuned plan slower than default "
+            f"({tuned_s * 1e6:.0f}us vs {default_s * 1e6:.0f}us)")
+
+        row = {
+            "family": fam,
+            "default_us": default_s * 1e6,
+            "tuned_us": tuned_s * 1e6,
+            "improvement_pct": 100.0 * (1.0 - tuned_s / max(default_s, 1e-12)),
+            "chosen": res.chosen,
+            "speedup_vs_default": res.speedup_vs_default,
+            "tune_s": res.tune_time_s,
+            "warm_solves": warm_solves,
+            "warm_retraces": warm_retraces,
+            "candidates": res.replay_us,
+        }
+        rows.append(row)
+        print(f"{fam},{row['default_us']:.0f},{row['tuned_us']:.0f},"
+              f"{row['improvement_pct']:.1f},{res.chosen},"
+              f"{res.tune_time_s:.2f},{warm_solves},{warm_retraces}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"(JSON written to {args.json})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

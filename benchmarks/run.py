@@ -15,6 +15,7 @@ Harness -> paper artifact map:
   bench_param_sweep-> parameterized serving: warm rebind + fused sweeps
   bench_vqe        -> variational workloads: adjoint vs parameter-shift grads
   bench_serve      -> serving layer: structure-keyed dynamic batching under load
+  bench_autotune   -> profile-guided planning: A/B plan replay + cached winners
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -31,7 +32,7 @@ def main() -> None:
     ap.add_argument(
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "engine,param_sweep,vqe,serve,sim_dryrun",
+             "engine,param_sweep,vqe,serve,autotune,sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -173,6 +174,23 @@ def main() -> None:
                         f"coalesce={closed['coalesce_factor']:.1f}x "
                         f"open_p99={opened['p99_ms']:.0f}ms"))
 
+    autotune_rows = None
+    if "autotune" not in skip:
+        section("bench_autotune (profile-guided plan A/B replay)")
+        from . import bench_autotune
+
+        t0 = time.time()
+        autotune_rows = bench_autotune.main([])
+        dt = time.time() - t0
+        best = max(autotune_rows, key=lambda r: r["improvement_pct"])
+        never_slower = all(r["tuned_us"] <= r["default_us"] * 1.05
+                           for r in autotune_rows)
+        summary.append((
+            "bench_autotune", 1e6 * dt / max(len(autotune_rows), 1),
+            f"best_improvement={best['improvement_pct']:.1f}%"
+            f"({best['family']}:{best['chosen']}) "
+            f"never_slower={never_slower}"))
+
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")
         from . import bench_sim_dryrun
@@ -187,12 +205,20 @@ def main() -> None:
     for name, us, derived in summary:
         print(f"{name},{us:.0f},{derived}")
     if args.json:
+        payload = {"rows": [{"name": n, "us_per_call": us, "derived": d}
+                            for n, us, d in summary]}
+        if autotune_rows is not None:
+            # per-family autotune outcome (chosen plan, speedup, candidate
+            # replay times) + the calibration this process planned with
+            from repro.sim.profiler import resolve_calibration
+
+            _, calib_info = resolve_calibration()
+            payload["autotune"] = {
+                "calibration": calib_info,
+                "families": autotune_rows,
+            }
         with open(args.json, "w") as f:
-            json.dump(
-                {"rows": [{"name": n, "us_per_call": us, "derived": d}
-                          for n, us, d in summary]},
-                f, indent=2,
-            )
+            json.dump(payload, f, indent=2)
         print(f"(summary JSON written to {args.json})")
 
 

@@ -1,4 +1,4 @@
-"""Kernel cost model (paper §VI-B), re-derived for TPU v5e.
+"""Kernel cost model (paper §VI-B): analytical defaults + measured calibration.
 
 The paper profiles two kernel execution modes on A100:
 
@@ -7,32 +7,33 @@ The paper profiles two kernel execution modes on A100:
 * **shared-memory (shm)** — stream state-vector blocks through on-chip memory
   and apply gates one by one. Cost = alpha + sum_g cost(g).
 
-TPU adaptation (all constants below are *analytical*, derived from published
-chip specs, since this container has no TPU to profile — the derivation
-replaces the paper's §VII-A microbenchmarks):
+The **analytic defaults** below are derived from published TPU v5e chip specs
+(197 TFLOP/s bf16, ~49 TFLOP/s fp32 MXU, 819 GB/s HBM, ~128 MB VMEM):
 
-* chip: TPU v5e — 197 TFLOP/s bf16, ~49 TFLOP/s fp32 MXU, 819 GB/s HBM,
-  ~128 MB VMEM.
-* state shard: ``2^L`` complex64 amplitudes (8 bytes each).
-* one HBM read+write pass over a 2^28-amplitude shard:
+* one HBM read+write pass over a 2^28-amplitude complex64 shard:
   ``2 * 8 B * 2^28 / 819e9 = 5.24 ms`` -> ``PASS_US = 5243``.
 * fusion kernel with k qubits: matmul ``[2^(L-k), 2^k] x [2^k, 2^k]`` in
   planar complex fp32 = ``8 * 2^L * 2^k`` real FLOPs
   -> ``43.8 us * 2^k`` at 49 TFLOP/s; memory-bound until k ~ 7 (the 128-wide
   MXU tile), compute doubles per extra qubit after that.
 * shm kernel: one streaming pass (= PASS_US) + per-gate VPU work inside VMEM;
-  VMEM-resident gate application ~ 200 us/gate per 2^28 shard (diagonal gates
-  half of that). Blocks must contain the lowest ``IO_QUBITS`` physical qubits
-  so each VMEM transfer moves >= one full (8,128) fp32 tile, mirroring the
-  paper's 128-byte minimum-transaction rule.
+  blocks must contain the lowest ``IO_QUBITS`` physical qubits so each VMEM
+  transfer moves >= one full (8,128) fp32 tile (the paper's 128-byte
+  minimum-transaction rule).
 
-Only *relative* costs matter to the kernelizer; everything is reported in
+These constants replace the paper's §VII-A microbenchmarks **only until a
+measured calibration exists**: :mod:`repro.sim.profiler` times the same
+primitives on the *actual* device and :meth:`CostModel.from_calibration`
+rebuilds the model from those measurements (persisted to a JSON file keyed by
+a device fingerprint, auto-loaded by ``repro.sim.engine.engine_for``). Only
+*relative* costs matter to the kernelizer; everything is reported in
 microseconds for a 2^28-amplitude shard.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass, fields, replace
+from typing import Dict, Mapping, Optional
 
 # hardware-derived constants (see module docstring)
 PASS_US = 5243.0  # one HBM read+write pass over a 2^28-amp shard
@@ -52,47 +53,24 @@ SHM = 1
 HOST_LINK_GBPS = 32.0
 AMP_BYTES = 8  # complex64
 
-
-def offload_pass_us(L: int) -> float:
-    """Modeled host-link time for one read+write pass over a 2^L-amplitude
-    shard. With double-buffered streaming the link and the device overlap, so
-    a stage's lower bound is max(link, HBM) rather than their sum — this is
-    what bench_offload's overlap ratio measures progress against."""
-    return 2 * AMP_BYTES * (1 << L) / (HOST_LINK_GBPS * 1e3)
+# ILP staging communication weight: Eq. 2 prices a global-tier (inter-pod)
+# qubit swap at ``comm_weight`` local-tier swaps. Part of the cost model so
+# calibration / autotuning can vary it alongside the kernel constants.
+COMM_WEIGHT = 3.0
 
 
-def stage_pass_us(n_passes: int, L: int = 28) -> float:
-    """HBM cost of a stage that executes in ``n_passes`` memory passes (the
-    compiled pass model: one per top-level op; an shm group of g gates is ONE
-    pass — the alpha + sum_g cost(g) regime)."""
-    frac = (1 << L) / (1 << 28)
-    return n_passes * PASS_US * frac
-
-
-def fusion_cost(k: int) -> float:
-    """Cost of a k-qubit fusion kernel (us per 2^28-amp shard)."""
-    if k > MAX_FUSION_QUBITS:
-        return float("inf")
-    return LAUNCH_US + max(PASS_US, MXU_US_PER_2K * (2**k))
-
-
-def shm_open_cost() -> float:
-    """alpha: streaming a shard through VMEM once."""
-    return LAUNCH_US + PASS_US
-
-
-def shm_gate_cost(diagonal: bool) -> float:
-    return SHM_DIAG_GATE_US if diagonal else SHM_GATE_US
-
-
-def best_fusion_size() -> int:
-    """Most cost-efficient fusion kernel size (cost per qubit covered)."""
-    return min(range(1, MAX_FUSION_QUBITS + 1), key=lambda k: fusion_cost(k) / k)
+class DegenerateCostModelError(ValueError):
+    """A cost model whose table admits no finite-cost kernel choice (e.g.
+    ``max_fusion_qubits < 1`` or an all-``inf`` calibration). Raised instead
+    of silently returning an argmin over infinities."""
 
 
 @dataclass(frozen=True)
 class CostModel:
-    """Parameterizable cost model so tests/benches can use synthetic values."""
+    """Parameterizable cost model: analytic defaults, synthetic test values,
+    or measured calibrations (:meth:`from_calibration`) all share this shape.
+    Every ILP staging and DP kernelization decision flows from one instance,
+    including the host-link/offload constants."""
 
     pass_us: float = PASS_US
     mxu_us_per_2k: float = MXU_US_PER_2K
@@ -102,6 +80,9 @@ class CostModel:
     max_fusion_qubits: int = MAX_FUSION_QUBITS
     max_shm_qubits: int = MAX_SHM_QUBITS
     io_qubits: int = IO_QUBITS
+    host_link_gbps: float = HOST_LINK_GBPS
+    amp_bytes: int = AMP_BYTES
+    comm_weight: float = COMM_WEIGHT
 
     def fusion_cost(self, k: int) -> float:
         if k > self.max_fusion_qubits:
@@ -120,9 +101,136 @@ class CostModel:
         return self.shm_open_cost()
 
     def best_fusion_size(self) -> int:
-        return min(
-            range(1, self.max_fusion_qubits + 1), key=lambda k: self.fusion_cost(k) / k
-        )
+        """Most cost-efficient fusion kernel size (cost per qubit covered).
+
+        Raises :class:`DegenerateCostModelError` when no fusion size has a
+        finite cost (``max_fusion_qubits < 1`` or a degenerate calibration) —
+        an argmin over an all-``inf`` table would silently return an
+        arbitrary size."""
+        if self.max_fusion_qubits < 1:
+            raise DegenerateCostModelError(
+                f"max_fusion_qubits={self.max_fusion_qubits}: no fusion "
+                "kernel size is admissible")
+        import math
+
+        finite = [
+            k for k in range(1, self.max_fusion_qubits + 1)
+            if math.isfinite(self.fusion_cost(k))
+        ]
+        if not finite:
+            raise DegenerateCostModelError(
+                "all fusion costs are non-finite (degenerate calibration: "
+                f"pass_us={self.pass_us}, mxu_us_per_2k={self.mxu_us_per_2k}, "
+                f"launch_us={self.launch_us})")
+        return min(finite, key=lambda k: self.fusion_cost(k) / k)
+
+    # ------------------------------------------------------------- offload
+    def offload_pass_us(self, L: int) -> float:
+        """Modeled host-link time for one read+write pass over a
+        2^L-amplitude shard. With double-buffered streaming the link and the
+        device overlap, so a stage's lower bound is max(link, HBM) rather
+        than their sum — bench_offload's overlap ratio measures progress
+        against this."""
+        return 2 * self.amp_bytes * (1 << L) / (self.host_link_gbps * 1e3)
+
+    def stage_pass_us(self, n_passes: int, L: int = 28) -> float:
+        """HBM cost of a stage that executes in ``n_passes`` memory passes
+        (the compiled pass model: one per top-level op; an shm group of g
+        gates is ONE pass — the alpha + sum_g cost(g) regime)."""
+        frac = (1 << L) / (1 << 28)
+        return n_passes * self.pass_us * frac
+
+    # ----------------------------------------------------- (de)serialization
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "CostModel":
+        known = {f.name for f in fields(CostModel)}
+        kw = {k: v for k, v in dict(d).items() if k in known}
+        for f in fields(CostModel):
+            if f.name in kw and f.type == "int":
+                kw[f.name] = int(kw[f.name])
+        return CostModel(**kw)
+
+    @staticmethod
+    def from_calibration(
+        measurements: Mapping,
+        base: Optional["CostModel"] = None,
+    ) -> "CostModel":
+        """Build a cost model from profiler measurements.
+
+        ``measurements`` carries any subset of the dataclass field names
+        (already reduced to the 2^28-amp-shard reference scale by
+        :mod:`repro.sim.profiler`); missing fields inherit from ``base``
+        (default: the analytic model). Measured float constants are floored
+        at tiny positive values so a degenerate measurement (a 0.0 timer
+        tick) can never poison the DP with zero/negative costs, and the
+        capacity fields (``max_*``, ``io_qubits``) are kept integral.
+        Raises :class:`DegenerateCostModelError` if the resulting model
+        admits no finite fusion kernel."""
+        base = DEFAULT_COST_MODEL if base is None else base
+        kw = base.to_dict()
+        floors = {
+            "pass_us": 1e-3, "mxu_us_per_2k": 1e-6, "launch_us": 0.0,
+            "shm_gate_us": 1e-4, "shm_diag_gate_us": 1e-4,
+            "host_link_gbps": 1e-3, "comm_weight": 1e-3,
+        }
+        for f in fields(CostModel):
+            name = f.name
+            if name not in measurements:
+                continue
+            v = measurements[name]
+            if v is None:
+                continue
+            if name in floors:
+                v = float(v)
+                if not (v == v) or v in (float("inf"), float("-inf")):
+                    continue  # NaN/inf measurement: keep the base value
+                kw[name] = max(v, floors[name])
+            else:
+                kw[name] = int(v)
+        cm = CostModel(**kw)
+        cm.best_fusion_size()  # raises DegenerateCostModelError if unusable
+        return cm
+
+    def with_overrides(self, **kw) -> "CostModel":
+        """A copy with some fields replaced (autotune candidate knobs)."""
+        return replace(self, **kw)
 
 
 DEFAULT_COST_MODEL = CostModel()
+
+
+# ---------------------------------------------------------------------------
+# Module-level compatibility shims over DEFAULT_COST_MODEL
+# ---------------------------------------------------------------------------
+
+
+def offload_pass_us(L: int) -> float:
+    """Shim: :meth:`CostModel.offload_pass_us` on the analytic defaults."""
+    return DEFAULT_COST_MODEL.offload_pass_us(L)
+
+
+def stage_pass_us(n_passes: int, L: int = 28) -> float:
+    """Shim: :meth:`CostModel.stage_pass_us` on the analytic defaults."""
+    return DEFAULT_COST_MODEL.stage_pass_us(n_passes, L)
+
+
+def fusion_cost(k: int) -> float:
+    """Cost of a k-qubit fusion kernel (us per 2^28-amp shard)."""
+    return DEFAULT_COST_MODEL.fusion_cost(k)
+
+
+def shm_open_cost() -> float:
+    """alpha: streaming a shard through VMEM once."""
+    return DEFAULT_COST_MODEL.shm_open_cost()
+
+
+def shm_gate_cost(diagonal: bool) -> float:
+    return DEFAULT_COST_MODEL.shm_gate_cost(diagonal)
+
+
+def best_fusion_size() -> int:
+    """Most cost-efficient fusion kernel size (cost per qubit covered)."""
+    return DEFAULT_COST_MODEL.best_fusion_size()

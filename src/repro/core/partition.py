@@ -140,7 +140,7 @@ def partition(
     L: int,
     R: int = 0,
     G: int = 0,
-    c: float = 3.0,
+    c: Optional[float] = None,
     staging_method: str = "ilp",
     kernelize_method: str = "dp",
     cost_model: CostModel = DEFAULT_COST_MODEL,
@@ -148,8 +148,14 @@ def partition(
     time_limit: float = 120.0,
     validate: bool = True,
 ) -> SimulationPlan:
-    """Alg. 1 PARTITION: hierarchical staging + per-stage kernelization."""
+    """Alg. 1 PARTITION: hierarchical staging + per-stage kernelization.
+
+    ``c`` (the Eq. 2 global-swap weight) defaults to the cost model's
+    ``comm_weight`` so a calibrated/autotuned model steers the ILP
+    objective too, not just the kernelizer."""
     assert L + R + G == circuit.n_qubits, "L+R+G must equal n_qubits"
+    if c is None:
+        c = cost_model.comm_weight
     t0 = time.time()
     if G + R == 0:
         # single-shard simulation: one trivial stage containing everything
@@ -225,6 +231,8 @@ def partition(
         staging_objective=sres.objective,
         total_kernel_cost=total_cost,
         preprocess_time_s=time.time() - t0,
+        meta={"comm_weight": float(c),
+              "staging_solve_time_s": sres.solve_time_s},
     )
     if validate:
         validate_plan(circuit, plan)

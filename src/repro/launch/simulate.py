@@ -88,6 +88,9 @@ def main(argv=None):
     ap.add_argument("--staging", default="ilp", choices=["ilp", "greedy"])
     ap.add_argument("--kernelizer", default="dp", choices=["dp", "ordered", "greedy"])
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="A/B-replay candidate plans first and serve the "
+                         "fastest (implies --engine; winner is cached)")
     ap.add_argument("--engine", action="store_true",
                     help="route through the unified ExecutionEngine + compile "
                          "cache (repro.sim.engine.engine_for)")
@@ -125,7 +128,8 @@ def main(argv=None):
     measuring = bool(args.shots or args.marginal or args.observable)
     marginals = [tuple(int(q) for q in spec.split(",")) for spec in args.marginal]
     binds = _parse_bind(args.bind)
-    use_engine = (args.engine or args.batch > 1 or args.executor == "dense"
+    use_engine = (args.engine or args.autotune or args.batch > 1
+                  or args.executor == "dense"
                   or args.sweep is not None or args.vqe is not None)
     if use_engine and args.executor == "pergate":
         ap.error("--engine/--batch/--sweep do not support the pergate baseline")
@@ -141,6 +145,17 @@ def main(argv=None):
         backend_kw = {"mesh": _pjit_mesh(args.R, args.G)} \
             if args.executor == "pjit" else {}
         t0 = time.time()
+        if args.autotune:
+            from ..core.autotune import autotune_engine
+
+            res = autotune_engine(
+                circ, L, args.R, args.G, backend=args.executor,
+                use_pallas=args.pallas, backend_kw=backend_kw)
+            print(f"autotune: chose '{res.chosen}' "
+                  f"({res.speedup_vs_default:.2f}x vs default, "
+                  f"{len(res.replay_us)} candidates, "
+                  f"{res.tune_time_s:.1f}s"
+                  f"{', cached' if res.cached else ''})")
         ex = engine_for(
             circ, L, args.R, args.G, backend=args.executor,
             use_pallas=args.pallas, staging_method=args.staging,

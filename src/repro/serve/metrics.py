@@ -118,6 +118,7 @@ class Metrics:
         self._lock = threading.Lock()
         self._counters: Dict[str, float] = {}
         self._hists: Dict[str, Histogram] = {}
+        self._info: Dict[str, object] = {}
 
     def inc(self, name: str, value: float = 1.0) -> None:
         with self._lock:
@@ -137,6 +138,12 @@ class Metrics:
     def timer(self, name: str) -> _Timer:
         return _Timer(self, name)
 
+    def set_info(self, name: str, value) -> None:
+        """Attach a structured JSON-able blob (autotune outcomes, calibration
+        provenance, ...) surfaced verbatim under ``snapshot()["info"]``."""
+        with self._lock:
+            self._info[name] = value
+
     def hist(self, name: str) -> Optional[Histogram]:
         with self._lock:
             return self._hists.get(name)
@@ -155,6 +162,8 @@ class Metrics:
                 "counters": dict(self._counters),
                 "timers": {k: h.snapshot() for k, h in self._hists.items()},
             }
+            if self._info:
+                out["info"] = dict(self._info)
         c = out["counters"]
         batches = c.get("batches_total", 0.0)
         coalesced = c.get("requests_executed", 0.0)

@@ -212,6 +212,19 @@ class WarmPool:
             if getattr(e, "provenance", {}).get("degraded")
             or getattr(e, "provenance", {}).get("integrity_retries")
         ]
+        # per-engine wall-time aggregates + autotune outcomes, keyed by
+        # truncated CircuitKey digest (matches requests_by_key)
+        with self.cache._lock:
+            entries = list(self.cache._d.items())
+        out["engine_timings"] = {
+            k.digest[:12]: e.timing_snapshot()
+            for k, e in entries if getattr(e, "timings", None)
+        }
+        out["autotuned_engines"] = {
+            k.digest[:12]: e.provenance["autotune"]
+            for k, e in entries
+            if getattr(e, "provenance", {}).get("autotune")
+        }
         return out
 
 
@@ -465,6 +478,14 @@ class SimulationService:
             "dp": kernelization.SOLVER_CALLS["dp"],
         }
         snap["retry_after_s"] = self.retry_after()
+        # profile-guided planning provenance: which cost model this process
+        # plans with, tuning outcomes, and the production observation ring
+        from ..core.autotune import tuned_outcomes
+        from ..sim.profiler import observation_summary, resolve_calibration
+
+        snap["calibration"] = resolve_calibration()[1]
+        snap["autotune"] = tuned_outcomes()
+        snap["observations"] = observation_summary()
         from ..sim import faults
 
         plan = faults.active()

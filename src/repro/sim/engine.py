@@ -917,6 +917,7 @@ class HostOffloadBackend(Backend):
         L = eng.L
         if faults._ACTIVE is not None:
             faults.maybe_inject("slow_stage", site="offload.stage")
+        t_stage = time.perf_counter()
         batched = state.ndim == 2
         fn = self.shard_fn(_op_sig(prog.ops), batched=batched,
                            sweep=self._sweep_consts is not None)
@@ -944,6 +945,9 @@ class HostOffloadBackend(Backend):
         if pending is not None:
             ps, pout = pending
             state[..., ps << L:(ps + 1) << L] = np.asarray(pout)
+        # eager backend => per-stage wall time is directly observable (the
+        # traced backends can only time whole executables)
+        eng._record_time("offload_stage", (time.perf_counter() - t_stage) * 1e6)
         return state
 
     def _remap(self, state: np.ndarray, slot, spec: RemapSpec) -> np.ndarray:
@@ -1169,6 +1173,12 @@ class ExecutionEngine:
         self.bind_count = 0
         self.xla_compiles = 0  # traces of backend executables (rebinding
         # must never increment this after warmup)
+        # per-entry-point wall-time aggregates (count/total/last/max in us),
+        # fed by _record_time on every run*/offload-stage; every record also
+        # lands in the profiler observation ring so production traffic keeps
+        # contributing calibration sanity-check data. Surfaced by
+        # timing_snapshot() -> serve stats / bench JSON.
+        self.timings: Dict[str, Dict[str, float]] = {}
         self._struct_cache: Dict = {}  # binding-independent build artifacts
         # shared by every bind_tensors pass (see compile_plan struct_cache)
         # op-tensor registry, keyed by stable ``Op.uid``: one device array per
@@ -1240,6 +1250,31 @@ class ExecutionEngine:
                 f"{len(names)} parameters {names}"
             )
         return [dict(zip(names, row)) for row in arr]
+
+    # --------------------------------------------------------------- timing
+    def _record_time(self, name: str, wall_us: float) -> None:
+        t = self.timings.setdefault(
+            name, {"count": 0, "total_us": 0.0, "last_us": 0.0, "max_us": 0.0})
+        t["count"] += 1
+        t["total_us"] += wall_us
+        t["last_us"] = wall_us
+        t["max_us"] = max(t["max_us"], wall_us)
+        from . import profiler
+
+        profiler.record_observation(
+            name, wall_us=wall_us, backend=self.backend.name,
+            n=self.n, L=self.L, n_stages=len(self.cc.programs))
+
+    def timing_snapshot(self) -> Dict[str, Dict[str, float]]:
+        """JSON-able copy of the per-entry-point wall-time aggregates, with
+        derived means — the serve stats and bench ``--json`` payloads embed
+        this."""
+        snap: Dict[str, Dict[str, float]] = {}
+        for k, t in self.timings.items():
+            d = dict(t)
+            d["mean_us"] = d["total_us"] / max(d["count"], 1)
+            snap[k] = d
+        return snap
 
     # ------------------------------------------------------------- shared
     @property
@@ -1335,8 +1370,10 @@ class ExecutionEngine:
         self._require_bound()
         if faults._ACTIVE is not None:
             faults.maybe_inject("slow_stage", site="engine.run")
+        t0 = time.perf_counter()
         state = self.backend.prepare(psi0)
         out = self.backend.extract(self.backend.execute(state, True))
+        self._record_time("run", (time.perf_counter() - t0) * 1e6)
         if faults._ACTIVE is not None and faults.should_corrupt("engine.run"):
             out = self._poison(out)
         if verify:
@@ -1354,7 +1391,9 @@ class ExecutionEngine:
         self._require_bound()
         if faults._ACTIVE is not None:
             faults.maybe_inject("slow_stage", site="engine.run")
+        t0 = time.perf_counter()
         out = self.backend.execute(self.backend.prepare(psi0), False)
+        self._record_time("run_packed", (time.perf_counter() - t0) * 1e6)
         if faults._ACTIVE is not None and faults.should_corrupt("engine.run"):
             out = self._poison(out)
         if verify:
@@ -1367,9 +1406,12 @@ class ExecutionEngine:
         packed layout when ``apply_final=False`` (measure each element via
         :func:`repro.sim.measure.measure_batch`)."""
         self._require_bound()
+        t0 = time.perf_counter()
         states = self.backend.prepare(psi0s, batch=True)
         out = self.backend.execute_batch(states, apply_final)
-        return self.backend.extract(out, batch=True) if apply_final else out
+        out = self.backend.extract(out, batch=True) if apply_final else out
+        self._record_time("run_batch", (time.perf_counter() - t0) * 1e6)
+        return out
 
     def run_sweep(self, psi0, params_batch, apply_final: bool = True,
                   *, verify: bool = False):
@@ -1388,6 +1430,7 @@ class ExecutionEngine:
         points = self._sweep_points(params_batch)
         if not points:
             raise ValueError("empty params_batch")
+        t0 = time.perf_counter()
         if self.backend.supports_fused_sweep():
             if faults._ACTIVE is not None:
                 faults.maybe_inject("slow_stage", site="engine.run_sweep")
@@ -1412,6 +1455,7 @@ class ExecutionEngine:
                 out = np.stack(outs)
             else:
                 out = jnp.stack(outs)
+        self._record_time("run_sweep", (time.perf_counter() - t0) * 1e6)
         if faults._ACTIVE is not None and faults.should_corrupt("engine.run_sweep"):
             out = self._poison_row(out, len(points))
         if verify:
@@ -1547,6 +1591,18 @@ def _canon(v):
     return v
 
 
+def _resolve_cost_model(cm: Optional[CostModel]) -> CostModel:
+    """``cost_model=None`` (the serving default) means "whatever this device
+    is calibrated to": the profiler's memoized resolution — the measured
+    model when a fingerprint-matching calibration file exists, the analytic
+    defaults otherwise. Explicit models pass through untouched."""
+    if cm is not None:
+        return cm
+    from . import profiler
+
+    return profiler.resolve_cost_model()
+
+
 def _placement_fingerprint(backend_kw: Optional[dict]) -> Tuple:
     """Stable fingerprint of backend placement kwargs (mesh, devices, ...):
     two requests whose placements differ must NOT share a cached engine."""
@@ -1593,9 +1649,10 @@ class CircuitKey:
         peephole: bool = True,
         staging_method: str = "ilp",
         kernelize_method: str = "dp",
-        cost_model: CostModel = DEFAULT_COST_MODEL,
+        cost_model: Optional[CostModel] = None,
         extra=(),
     ) -> "CircuitKey":
+        cost_model = _resolve_cost_model(cost_model)
         cm = tuple(
             (f.name, _canon(getattr(cost_model, f.name)))
             for f in _dc_fields(cost_model)
@@ -1726,7 +1783,7 @@ def circuit_key_for(
     peephole: bool = True,
     staging_method: str = "ilp",
     kernelize_method: str = "dp",
-    cost_model: CostModel = DEFAULT_COST_MODEL,
+    cost_model: Optional[CostModel] = None,
     backend_kw: Optional[dict] = None,
     **plan_kw,
 ) -> CircuitKey:
@@ -1876,7 +1933,7 @@ def engine_for(
     peephole: bool = True,
     staging_method: str = "ilp",
     kernelize_method: str = "dp",
-    cost_model: CostModel = DEFAULT_COST_MODEL,
+    cost_model: Optional[CostModel] = None,
     cache: Optional[CompileCache] = DEFAULT_CACHE,
     plan: Optional[SimulationPlan] = None,
     backend_kw: Optional[dict] = None,
@@ -1903,6 +1960,8 @@ def engine_for(
         return build_engine(circuit, plan, backend=backend, dtype=dtype,
                             use_pallas=use_pallas, peephole=peephole,
                             backend_kw=backend_kw, degrade=degrade)
+    explicit_cm = cost_model is not None
+    cost_model = _resolve_cost_model(cost_model)
     key = circuit_key_for(
         circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
         peephole=peephole, staging_method=staging_method,
@@ -1932,6 +1991,13 @@ def engine_for(
                                    dtype=dtype, use_pallas=use_pallas,
                                    peephole=peephole, backend_kw=backend_kw,
                                    degrade=degrade, provenance=prov)
+                if explicit_cm:
+                    eng.provenance["calibration"] = {"source": "explicit"}
+                else:
+                    from . import profiler
+
+                    eng.provenance["calibration"] = (
+                        profiler.resolve_calibration()[1])
                 if cache is not None:
                     cache.put(key, eng)
                 return eng

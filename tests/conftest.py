@@ -7,6 +7,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# the suite must plan identically on every machine: never auto-load a
+# developer's local device calibration (tests that exercise calibrated
+# planning opt back in via monkeypatch + an explicit file)
+os.environ.setdefault("REPRO_CALIBRATION", "off")
+
 import numpy as np
 import pytest
 
