@@ -16,6 +16,7 @@ Harness -> paper artifact map:
   bench_vqe        -> variational workloads: adjoint vs parameter-shift grads
   bench_serve      -> serving layer: structure-keyed dynamic batching under load
   bench_autotune   -> profile-guided planning: A/B plan replay + cached winners
+  bench_optimize   -> pre-staging circuit optimizer: gates/stages removed
   bench_sim_dryrun -> production-scale dry-run of the simulator (512 chips)
 """
 
@@ -32,7 +33,7 @@ def main() -> None:
     ap.add_argument(
         "--skip", default="sim_dryrun",
         help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "engine,param_sweep,vqe,serve,autotune,sim_dryrun",
+             "engine,param_sweep,vqe,serve,autotune,optimize,sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -190,6 +191,21 @@ def main() -> None:
             f"best_improvement={best['improvement_pct']:.1f}%"
             f"({best['family']}:{best['chosen']}) "
             f"never_slower={never_slower}"))
+
+    if "optimize" not in skip:
+        section("bench_optimize (pre-staging optimizer: gates/stages removed)")
+        from . import bench_optimize
+
+        t0 = time.time()
+        rows = bench_optimize.main([])
+        dt = time.time() - t0
+        red = next(r for r in rows if r["family"] == "redundant")
+        never_more = all(r["gates_after"] <= r["gates_before"] for r in rows)
+        summary.append((
+            "bench_optimize", 1e6 * dt / max(len(rows), 1),
+            f"redundant_removed={red['gates_removed']} "
+            f"stages={red['stages_before']}->{red['stages_after']} "
+            f"speedup={red['speedup']:.2f}x never_more_gates={never_more}"))
 
     if "sim_dryrun" not in skip:
         section("bench_sim_dryrun (512-chip simulator dry-run)")

@@ -5,7 +5,7 @@ truth is wall time on the actual device. This module closes the loop:
 
 1. enumerate candidate planning knobs (:func:`default_candidates` — analytic
    vs calibrated cost model, kernelizer method, fusion-size caps, ILP
-   communication weights);
+   communication weights, pre-staging circuit optimizer on/off);
 2. build + compile an engine per candidate and **replay** the same workload
    end-to-end on each warm engine (:func:`autotune_engine`), best-of-N
    timing after warmup;
@@ -42,6 +42,10 @@ class PlanCandidate:
     cost_model: CostModel
     staging_method: str = "ilp"
     kernelize_method: str = "dp"
+    #: run the pre-staging circuit optimizer (repro.core.optimize) before
+    #: planning this candidate — the replay decides whether the rewrite
+    #: actually pays on this workload/device
+    optimize: bool = False
 
     def describe(self) -> Dict:
         return {
@@ -50,6 +54,7 @@ class PlanCandidate:
             "kernelize_method": self.kernelize_method,
             "max_fusion_qubits": self.cost_model.max_fusion_qubits,
             "comm_weight": self.cost_model.comm_weight,
+            "optimize": self.optimize,
         }
 
 
@@ -67,17 +72,22 @@ def default_candidates(
 
     resolved = base if base is not None else resolve_cost_model()
     cands = [PlanCandidate("default", resolved)]
-    seen = {("ilp", "dp", resolved)}
+    seen = {("ilp", "dp", resolved, False)}
 
-    def add(name: str, cm: CostModel, sm: str = "ilp", km: str = "dp"):
-        if (sm, km, cm) not in seen:
-            seen.add((sm, km, cm))
-            cands.append(PlanCandidate(name, cm, sm, km))
+    def add(name: str, cm: CostModel, sm: str = "ilp", km: str = "dp",
+            opt: bool = False):
+        if (sm, km, cm, opt) not in seen:
+            seen.add((sm, km, cm, opt))
+            cands.append(PlanCandidate(name, cm, sm, km, opt))
 
     if resolved != DEFAULT_COST_MODEL:
         add("analytic", DEFAULT_COST_MODEL)
     add("kernelize:ordered", resolved, km="ordered")
     add("kernelize:greedy", resolved, km="greedy")
+    # pre-staging circuit optimizer on: fewer gates -> fewer stages/kernels,
+    # but the rewrite only wins if the workload is cancellation-rich — let
+    # the replay decide like every other knob
+    add("optimize", resolved, opt=True)
     for cap in (2, 4):
         if cap < resolved.max_fusion_qubits:
             add(f"fusion_cap:{cap}",
@@ -212,7 +222,8 @@ def autotune_engine(
             use_pallas=use_pallas, peephole=peephole,
             staging_method=cand.staging_method,
             kernelize_method=cand.kernelize_method,
-            cost_model=cand.cost_model, cache=None, **plan_kw)
+            cost_model=cand.cost_model, optimize=cand.optimize,
+            cache=None, **plan_kw)
         if bind_params is not None:
             eng.bind(bind_params)
         for _ in range(max(warmup, 1)):

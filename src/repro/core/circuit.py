@@ -145,12 +145,25 @@ class Gate:
 class Circuit:
     n_qubits: int
     gates: List[Gate] = field(default_factory=list)
+    #: set by :meth:`subcircuit`: ``parent_gids[j]`` is the gid, in the
+    #: parent circuit, of this circuit's gate ``j`` (local gids are
+    #: renumbered consecutively — this is the map back)
+    parent_gids: Optional[Tuple[int, ...]] = None
 
     # ------------------------------------------------------------------ build
     def add(self, name: str, *qubits: int, params: Sequence = ()) -> "Circuit":
         """Append a gate. ``params`` entries may be floats, :class:`Param`
-        objects, or bare strings (coerced to ``Param(name)``)."""
-        gd = G.GATE_DEFS[name]
+        objects, or bare strings (coerced to ``Param(name)``).
+
+        Raises :class:`ValueError` for a gate name outside the registry —
+        a typed, self-describing error (malformed serve requests surface it
+        verbatim) instead of a bare ``KeyError``.
+        """
+        gd = G.GATE_DEFS.get(name)
+        if gd is None:
+            raise ValueError(
+                f"unknown gate {name!r}; known gates: "
+                f"{', '.join(sorted(G.GATE_DEFS))}")
         if len(qubits) != gd.n_qubits:
             raise ValueError(f"gate {name} expects {gd.n_qubits} qubits, got {len(qubits)}")
         for q in qubits:
@@ -257,27 +270,66 @@ class Circuit:
         return preds
 
     def subcircuit(self, gate_ids: Iterable[int]) -> "Circuit":
+        """Circuit restricted to ``gate_ids`` (in the given order).
+
+        Gates are renumbered to consecutive local gids, and the original
+        ids are recorded in :attr:`parent_gids` (``parent_gids[j]`` is the
+        parent gid of local gate ``j``) so plan provenance and error
+        messages can always name the gate in the caller's circuit.
+        """
         sub = Circuit(self.n_qubits)
-        for gid in gate_ids:
+        ids = [int(gid) for gid in gate_ids]
+        for gid in ids:
             g = self.gates[gid]
             sub.gates.append(Gate(g.name, g.qubits, g.params, gid=len(sub.gates)))
+        sub.parent_gids = tuple(ids)
         return sub
 
     # ---------------------------------------------------------- equivalence
     def is_topologically_equivalent(self, order: Sequence[int]) -> bool:
         """True iff executing gates in ``order`` (a permutation of gate ids)
-        respects all same-qubit orderings of this circuit."""
+        keeps the EXACT relative order of every same-qubit gate pair.
+
+        This is the conservative check (sufficient for equivalence, used by
+        the staging correctness tests). Reorderings of *commuting* same-qubit
+        pairs — e.g. two diagonal gates sharing a qubit — are rejected here;
+        use :meth:`is_equivalent_order` to accept them.
+        """
         if sorted(order) != list(range(self.n_gates)):
             return False
         pos = {gid: i for i, gid in enumerate(order)}
         for q in range(self.n_qubits):
             ids = [g.gid for g in self.gates if q in g.qubits]
-            # Gates sharing a qubit commute if the shared qubit is insular to
-            # both and both act (anti-)diagonally on it; the conservative check
-            # (used by the correctness tests) requires exact order.
             for a, b in zip(ids, ids[1:]):
                 if pos[a] > pos[b]:
                     return False
+        return True
+
+    def is_equivalent_order(self, order: Sequence[int]) -> bool:
+        """True iff executing gates in ``order`` (a permutation of gate ids)
+        provably yields the same unitary: every same-qubit pair either keeps
+        its relative order or commutes under
+        :func:`repro.core.optimize.gates_commute` (diagonal/diagonal,
+        control-commuting, same-rotation-family cases).
+
+        Any such order is reachable from the original by adjacent
+        transpositions of commuting gates (trace-monoid equivalence), so the
+        product is unchanged. Strictly weaker than
+        :meth:`is_topologically_equivalent` — every topologically-equivalent
+        order is accepted, plus commuting reorderings.
+        """
+        from .optimize import gates_commute  # local: optimize imports circuit
+
+        if sorted(order) != list(range(self.n_gates)):
+            return False
+        pos = {gid: i for i, gid in enumerate(order)}
+        for q in range(self.n_qubits):
+            ids = [g.gid for g in self.gates if q in g.qubits]
+            for i, a in enumerate(ids):
+                for b in ids[i + 1:]:
+                    if pos[a] > pos[b] and not gates_commute(
+                            self.gates[a], self.gates[b]):
+                        return False
         return True
 
     # -------------------------------------------------------------- (de)ser

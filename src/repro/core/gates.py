@@ -392,6 +392,28 @@ def gate_derivative(name: str, params: Sequence[ParamValue], slot: int) -> np.nd
 
 
 @lru_cache(maxsize=None)
+def structural_diagonal_bits(name: str) -> Tuple[bool, ...]:
+    """Per-gate-bit *diagonality* at the probe angles: bit ``q`` is diagonal
+    iff every structurally-nonzero ``U[r, c]`` has ``r_q == c_q``. Control
+    bits of a controlled gate always come out diagonal (the identity block
+    is diagonal and the active block keeps them at 1).
+
+    Unlike :func:`insular_mask` this EXCLUDES anti-diagonal bits: two gates
+    sharing only mutually-diagonal bits are simultaneously block-diagonal
+    over that bit's basis and therefore commute (the optimizer's
+    ``gates_commute`` predicate) — a property anti-diagonal bits lack.
+    Evaluated at :data:`PROBE_ANGLES`, so it is valid for every binding
+    (special concrete angles can only shrink the nonzero pattern).
+    """
+    m = structural_matrix(name)
+    k = int(round(math.log2(m.shape[0])))
+    rows, cols = np.nonzero(np.abs(m) > 1e-12)
+    return tuple(
+        bool(np.all(((rows >> q) & 1) == ((cols >> q) & 1))) for q in range(k)
+    )
+
+
+@lru_cache(maxsize=None)
 def structural_matrix(name: str) -> np.ndarray:
     """The gate's matrix at generic :data:`PROBE_ANGLES` — parameter-free.
 

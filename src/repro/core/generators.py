@@ -231,6 +231,56 @@ def hhl(n_problem: int, n_total: int = 28) -> Circuit:
     return c
 
 
+def redundant(n: int, reps: int = 2, seed: int = 29) -> Circuit:
+    """Cancellation-rich family for the pre-staging circuit optimizer.
+
+    Deliberately wasteful on three axes the optimizer targets:
+
+    * **inverse pairs** — h·h and cx·cx that drop entirely, including
+      long-range cx/swap pairs between qubit 0 and qubit n-1 whose literal
+      staging must localize both endpoints (extra stages the optimized plan
+      never pays);
+    * **mergeable rotation runs** — three adjacent rz per qubit that fold to
+      one;
+    * **commuting diagonal blocks** — cp's interleaved with off-qubit h's,
+      so only commutation-aware reordering can sink them together.
+
+    A qft-like entangling backbone survives optimization, keeping the
+    planned circuit non-trivial. Used by ``benchmarks/bench_optimize.py``,
+    where the optimizer must *strictly* reduce both gate count and stage
+    count on this family.
+    """
+    rng = np.random.default_rng(seed)
+    c = Circuit(n)
+    for q in range(n):
+        c.add("h", q)
+    for _ in range(reps):
+        for q in range(n):
+            c.add("h", q)
+            c.add("h", q)
+        for q in range(n - 1):
+            c.add("cx", q + 1, q)
+            c.add("cx", q + 1, q)
+        if n >= 2:
+            # long-range redundancy: forces qubits 0 and n-1 co-local in the
+            # literal plan (swap is non-insular on BOTH qubits)
+            c.add("cx", 0, n - 1)
+            c.add("cx", 0, n - 1)
+            c.add("swap", 0, n - 1)
+            c.add("swap", 0, n - 1)
+        for q in range(n):
+            for _k in range(3):
+                c.add("rz", q, params=(float(rng.uniform(0.1, 1.0)),))
+        for q in range(n - 1):
+            c.add("cx", q + 1, q)
+        for q in range(n - 1):
+            c.add("cp", q, q + 1, params=(float(rng.uniform(0.1, 1.0)),))
+            c.add("h", (q + 2) % n)
+    for q in range(n):
+        c.add("h", q)
+    return c
+
+
 def su2param(n: int, reps: int = 3) -> Circuit:
     """Symbolic su2random: the same structure as :func:`su2random` but every
     rotation angle is a free :class:`Param` (``r{layer}_{q}`` names). This is
@@ -306,6 +356,7 @@ FAMILIES: Dict[str, Callable[[int], Circuit]] = {
     "qft": qft,
     "qpeexact": qpeexact,
     "qsvm": qsvm,
+    "redundant": redundant,
     "su2random": su2random,
     "vqc": vqc,
     "wstate": wstate,

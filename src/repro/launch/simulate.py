@@ -88,6 +88,14 @@ def main(argv=None):
     ap.add_argument("--staging", default="ilp", choices=["ilp", "greedy"])
     ap.add_argument("--kernelizer", default="dp", choices=["dp", "ordered", "greedy"])
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--opt", dest="opt", action="store_true",
+                    help="run the pre-staging circuit optimizer "
+                         "(repro.core.optimize: cancel/merge/drop/reorder) "
+                         "before planning; --check verifies against the "
+                         "UN-optimized dense reference")
+    ap.add_argument("--no-opt", dest="opt", action="store_false",
+                    help="disable the pre-staging optimizer (default)")
+    ap.set_defaults(opt=False)
     ap.add_argument("--autotune", action="store_true",
                     help="A/B-replay candidate plans first and serve the "
                          "fastest (implies --engine; winner is cached)")
@@ -138,6 +146,9 @@ def main(argv=None):
         # the structural compile cache stays parameter-blind)
         circ = circ.bind(binds)
         binds = {}
+    # --check always cross-checks against the circuit as the user wrote it,
+    # never the optimizer's rewrite of it
+    ref_circ = circ
 
     if use_engine:
         from ..sim.engine import DEFAULT_CACHE, engine_for
@@ -159,12 +170,19 @@ def main(argv=None):
         ex = engine_for(
             circ, L, args.R, args.G, backend=args.executor,
             use_pallas=args.pallas, staging_method=args.staging,
-            kernelize_method=args.kernelizer, backend_kw=backend_kw,
+            kernelize_method=args.kernelizer, optimize=args.opt,
+            backend_kw=backend_kw,
         )
         plan = ex.plan
         print(f"engine[{ex.backend.name}] ready in {time.time() - t0:.2f}s; "
               f"cache: {len(DEFAULT_CACHE)} entries, {DEFAULT_CACHE.hits} hits"
               f"/{DEFAULT_CACHE.misses} misses")
+        opt_prov = getattr(ex, "provenance", {}).get("optimize")
+        if opt_prov:
+            print(f"optimizer: {opt_prov['gates_before']} -> "
+                  f"{opt_prov['gates_after']} gates "
+                  f"(-{opt_prov['gates_removed']}; "
+                  f"passes: {opt_prov['pass_counts']})")
         if binds:
             t0 = time.time()
             ex.bind(binds)
@@ -174,6 +192,14 @@ def main(argv=None):
             ap.error(f"circuit has free parameters {circ.param_names}; "
                      "pass --bind NAME=VAL, --sweep FILE.json or --vqe OBS")
     else:
+        if args.opt:
+            from ..core.optimize import optimize_circuit
+
+            ores = optimize_circuit(circ)
+            print(f"optimizer: {ores.source.n_gates} -> "
+                  f"{ores.circuit.n_gates} gates (-{ores.gates_removed}; "
+                  f"passes: {ores.pass_counts()})")
+            circ = ores.circuit
         t0 = time.time()
         plan = partition(circ, L, args.R, args.G,
                          staging_method=args.staging,
@@ -358,7 +384,7 @@ def main(argv=None):
             # final remap applied for the logical-order fidelity check
             out = ex.run() if args.executor != "pergate" else out
             out = np.asarray(jax.block_until_ready(out)) if not isinstance(out, np.ndarray) else out
-        ref = simulate(circ if circ.is_bound else ex.bound_circuit)
+        ref = simulate(ref_circ if ref_circ.is_bound else ref_circ.bind(binds))
         print(f"fidelity vs dense reference: {fidelity(out, ref):.6f}")
     return out
 

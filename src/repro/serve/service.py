@@ -225,6 +225,13 @@ class WarmPool:
             for k, e in entries
             if getattr(e, "provenance", {}).get("autotune")
         }
+        # pre-staging optimizer outcomes (gates removed, pass counts) for
+        # every pooled engine built with optimize= on
+        out["optimized_engines"] = {
+            k.digest[:12]: e.provenance["optimize"]
+            for k, e in entries
+            if getattr(e, "provenance", {}).get("optimize")
+        }
         return out
 
 

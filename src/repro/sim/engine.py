@@ -51,6 +51,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core import optimize as copt
 from ..core.circuit import Circuit
 from ..core.cost_model import CostModel, DEFAULT_COST_MODEL
 from ..core.gates import UnboundParameterError
@@ -1650,6 +1651,7 @@ class CircuitKey:
         staging_method: str = "ilp",
         kernelize_method: str = "dp",
         cost_model: Optional[CostModel] = None,
+        optimize=False,
         extra=(),
     ) -> "CircuitKey":
         cost_model = _resolve_cost_model(cost_model)
@@ -1657,10 +1659,14 @@ class CircuitKey:
             (f.name, _canon(getattr(cost_model, f.name)))
             for f in _dc_fields(cost_model)
         )
+        # the optimizer's pass-list fingerprint is its own key component:
+        # an optimized plan and the literal plan for the same structure must
+        # NEVER collide in the compile cache (their stage programs differ)
+        ofp = copt.optimize_fingerprint(optimize)
         payload = (
             circuit.structure_fingerprint(), (L, R, G), str(backend),
             str(np.dtype(dtype)), bool(use_pallas), bool(peephole),
-            staging_method, kernelize_method, cm, _canon(extra),
+            staging_method, kernelize_method, cm, ofp, _canon(extra),
         )
         return CircuitKey(hashlib.sha256(repr(payload).encode()).hexdigest())
 
@@ -1784,16 +1790,30 @@ def circuit_key_for(
     staging_method: str = "ilp",
     kernelize_method: str = "dp",
     cost_model: Optional[CostModel] = None,
+    optimize=False,
     backend_kw: Optional[dict] = None,
+    _pre_optimized: bool = False,
     **plan_kw,
 ) -> CircuitKey:
     """The exact :class:`CircuitKey` :func:`engine_for` would use for these
     arguments — exposed so warm-pool admission policies (``repro.serve``) can
-    reason about a request's cache key without building anything."""
+    reason about a request's cache key without building anything.
+
+    With ``optimize`` on, the key is computed over the OPTIMIZED circuit's
+    structure (plus the optimizer fingerprint): concrete circuits with the
+    same literal structure but different angles can optimize to different
+    structures (value-dependent identity drops), and each optimized
+    structure must own its own engine. ``_pre_optimized=True`` tells this
+    function that ``circuit`` already IS the optimizer output
+    (:func:`engine_for` uses this to avoid optimizing twice)."""
+    ocfg = copt.resolve_config(optimize)
+    if ocfg is not None and not _pre_optimized:
+        circuit = copt.optimize_circuit(circuit, ocfg).circuit
     return CircuitKey.make(
         circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
         peephole=peephole, staging_method=staging_method,
         kernelize_method=kernelize_method, cost_model=cost_model,
+        optimize=ocfg,
         extra=(tuple(sorted((k, _canon(v)) for k, v in plan_kw.items())),
                _placement_fingerprint(backend_kw)),
     )
@@ -1934,6 +1954,7 @@ def engine_for(
     staging_method: str = "ilp",
     kernelize_method: str = "dp",
     cost_model: Optional[CostModel] = None,
+    optimize=False,
     cache: Optional[CompileCache] = DEFAULT_CACHE,
     plan: Optional[SimulationPlan] = None,
     backend_kw: Optional[dict] = None,
@@ -1950,22 +1971,43 @@ def engine_for(
     compiles. Symbolic circuits are returned unbound; call ``bind``/
     ``run_sweep`` on the engine.
 
+    ``optimize`` (bool, pass-name sequence, or
+    :class:`repro.core.optimize.OptimizerConfig`) runs the pre-staging
+    circuit optimizer first: planning, compilation, caching and execution
+    all see the optimized circuit, and the key carries both the optimized
+    structure and the pass-list fingerprint (optimized and literal plans
+    never collide). Optimizing a symbolic circuit is binding-independent,
+    so warm rebinds keep the zero-solve / zero-retrace contract; the
+    rewrite provenance lands in ``engine.provenance["optimize"]``.
+
     Pass ``cache=None`` to force a fresh build; pass an explicit ``plan`` to
     bypass partitioning (such engines are NOT cached — the plan is outside
-    the key). ``backend_kw`` (e.g. a pjit mesh) IS part of the key, via a
-    placement fingerprint, so requests with different meshes/devices never
-    share a cached engine.
+    the key; combining ``plan`` with ``optimize`` raises, the plan was made
+    for the literal circuit). ``backend_kw`` (e.g. a pjit mesh) IS part of
+    the key, via a placement fingerprint, so requests with different
+    meshes/devices never share a cached engine.
     """
+    ocfg = copt.resolve_config(optimize)
     if plan is not None:
+        if ocfg is not None:
+            raise ValueError(
+                "engine_for: optimize= cannot be combined with an explicit "
+                "plan (the plan was computed for the literal circuit)")
         return build_engine(circuit, plan, backend=backend, dtype=dtype,
                             use_pallas=use_pallas, peephole=peephole,
                             backend_kw=backend_kw, degrade=degrade)
+    source_circuit = circuit
+    opt_result = None
+    if ocfg is not None:
+        opt_result = copt.optimize_circuit(circuit, ocfg)
+        circuit = opt_result.circuit
     explicit_cm = cost_model is not None
     cost_model = _resolve_cost_model(cost_model)
     key = circuit_key_for(
         circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
         peephole=peephole, staging_method=staging_method,
         kernelize_method=kernelize_method, cost_model=cost_model,
+        optimize=optimize, _pre_optimized=True,
         backend_kw=backend_kw, **plan_kw,
     )
     eng = cache.get(key) if cache is not None else None
@@ -1998,29 +2040,70 @@ def engine_for(
 
                     eng.provenance["calibration"] = (
                         profiler.resolve_calibration()[1])
+                if opt_result is not None:
+                    # the engine serves the OPTIMIZED circuit; record the
+                    # rewrite (and the config) so aliased hits — e.g. the
+                    # autotuner installing this engine under the default
+                    # key — can map literal requests through the same passes
+                    eng.opt_config = ocfg
+                    eng.provenance["optimize"] = dict(
+                        opt_result.to_dict(),
+                        passes=list(ocfg.passes),
+                        source_fingerprint=(
+                            source_circuit.structure_fingerprint()[:12]),
+                    )
                 if cache is not None:
                     cache.put(key, eng)
                 return eng
     with eng.lock:
-        if circuit.is_bound and (
-            eng.bound_circuit is None
-            or eng.bound_circuit.binding_signature() != circuit.binding_signature()
-        ):
-            # structural hit with different angles: the dominant serving
-            # pattern (same ansatz, new rotation parameters) — rebind, don't
-            # recompile
-            eng.bind_circuit(circuit)
-        elif not circuit.is_bound and (
-            eng.circuit.is_bound
-            or eng.circuit.binding_signature() != circuit.binding_signature()
-        ):
-            # symbolic request hitting an engine whose skeleton is concrete OR
-            # carries different Param names / affine coefficients (the
-            # structural key is deliberately blind to both): adopt the
-            # REQUESTED skeleton so the caller's bind()/run_sweep names and
-            # scales resolve correctly; the current binding is untouched.
-            # Adjoint programs wired to the old skeleton's names/scales are
-            # stale — drop them.
-            eng.circuit = circuit
-            eng.__dict__.pop("_adjoint_progs", None)
+        same_structure = (eng.circuit.structure_fingerprint()
+                          == circuit.structure_fingerprint())
+        if not same_structure:
+            # Structure mismatch on a key hit only happens through plan
+            # aliasing: the autotuner may install an OPTIMIZED winner under
+            # the default (literal) key. Map the request through the cached
+            # engine's own optimizer config; same optimized structure =>
+            # this is the engine's native circuit space and rebinding is
+            # exactly as safe as for a native optimized request.
+            ecfg = getattr(eng, "opt_config", None)
+            if ecfg is not None:
+                mapped = copt.optimize_circuit(source_circuit, ecfg).circuit
+                if (mapped.structure_fingerprint()
+                        == eng.circuit.structure_fingerprint()):
+                    circuit = mapped
+                    same_structure = True
+        if same_structure:
+            if circuit.is_bound and (
+                eng.bound_circuit is None
+                or eng.bound_circuit.binding_signature()
+                != circuit.binding_signature()
+            ):
+                # structural hit with different angles: the dominant serving
+                # pattern (same ansatz, new rotation parameters) — rebind,
+                # don't recompile
+                eng.bind_circuit(circuit)
+            elif not circuit.is_bound and (
+                eng.circuit.is_bound
+                or eng.circuit.binding_signature() != circuit.binding_signature()
+            ):
+                # symbolic request hitting an engine whose skeleton is
+                # concrete OR carries different Param names / affine
+                # coefficients (the structural key is deliberately blind to
+                # both): adopt the REQUESTED skeleton so the caller's
+                # bind()/run_sweep names and scales resolve correctly; the
+                # current binding is untouched. Adjoint programs wired to the
+                # old skeleton's names/scales are stale — drop them.
+                eng.circuit = circuit
+                eng.__dict__.pop("_adjoint_progs", None)
+    if not same_structure:
+        # aliased engine in a different circuit space (e.g. the request's
+        # angles optimize to a different structure than the cached winner's):
+        # never rebind across structures — build fresh, un-cached
+        return engine_for(
+            source_circuit, L, R, G, backend=backend, dtype=dtype,
+            use_pallas=use_pallas, peephole=peephole,
+            staging_method=staging_method, kernelize_method=kernelize_method,
+            cost_model=cost_model if explicit_cm else None,
+            optimize=optimize, cache=None, backend_kw=backend_kw,
+            degrade=degrade, **plan_kw)
     return eng

@@ -121,6 +121,123 @@ def build_circuit(
     return c
 
 
+# block ingredients for build_cancellation_circuit: exact inverse pairs the
+# cancel pass must kill, rotation families the merge pass must fold, and
+# diagonal gates the reorder pass likes to sink together
+_CANCEL_1Q = ["h", "x", "y", "z", ("s", "sdg"), ("t", "tdg")]
+_CANCEL_2Q = ["cx", "cy", "cz", "swap"]
+_MERGE_RUNS = ["rx", "ry", "rz", "p", "cp", "rzz"]
+_DIAG_BURST = ["rz", "p", "cz", "cp"]
+
+
+def cancellation_case(min_n: int = 2, max_n: int = 7, min_blocks: int = 3,
+                      max_blocks: int = 10, max_seed: int = 10_000) -> Dict:
+    """Keyword strategies for ``@given(**cancellation_case(...))``: draws the
+    ``(n, n_blocks, seed)`` triple :func:`build_cancellation_circuit` maps to
+    a redundancy-rich circuit."""
+    return dict(
+        n=st.integers(min_n, max_n),
+        n_blocks=st.integers(min_blocks, max_blocks),
+        seed=st.integers(0, max_seed),
+    )
+
+
+def build_cancellation_circuit(
+    n: int,
+    n_blocks: int,
+    seed: int,
+    *,
+    param_mode: str = "concrete",
+) -> Circuit:
+    """Deterministic redundancy-rich circuit for ``(n, n_blocks, seed)`` —
+    the adversarial input for ``repro.core.optimize``.
+
+    Each block is one of: an exact inverse pair (h·h, cx·cx, s·sdg, ...),
+    a run of 2-4 same-axis rotations on the same qubits (concrete angles, a
+    shared-name affine ``Param`` chain that folds exactly, or fresh-name
+    Params the merge pass must *refuse* to fold), a commuting diagonal burst
+    interleaved with off-qubit non-diagonal gates (reorder fodder), or a
+    random noise gate. ``param_mode``: ``"concrete"`` keeps every angle a
+    float; ``"mixed"`` coin-flips each rotation run between the three angle
+    modes above.
+    """
+    rng = np.random.default_rng(seed)
+    c = Circuit(n)
+    shared_pool = [f"w{j}" for j in range(max(2, n_blocks // 2))]
+
+    def qubits(k):
+        return tuple(int(q) for q in rng.choice(n, size=k, replace=False))
+
+    for _ in range(n_blocks):
+        kind = rng.random()
+        if kind < 0.30:
+            # exact inverse pair -> the cancel pass must drop both gates
+            if n >= 2 and rng.random() < 0.5:
+                name = _CANCEL_2Q[int(rng.integers(len(_CANCEL_2Q)))]
+                qs = qubits(2)
+                c.add(name, *qs)
+                c.add(name, *qs)
+            else:
+                pick = _CANCEL_1Q[int(rng.integers(len(_CANCEL_1Q)))]
+                (q,) = qubits(1)
+                a, b = pick if isinstance(pick, tuple) else (pick, pick)
+                c.add(a, q)
+                c.add(b, q)
+        elif kind < 0.55:
+            # same-axis rotation run -> merge pass folds (or must bail)
+            name = _MERGE_RUNS[int(rng.integers(len(_MERGE_RUNS)))]
+            gd = G.GATE_DEFS[name]
+            if gd.n_qubits > n:
+                continue
+            qs = qubits(gd.n_qubits)
+            mode = "concrete"
+            if param_mode != "concrete":
+                mode = ("concrete", "shared",
+                        "bail")[int(rng.integers(3))]
+            nm = shared_pool[int(rng.integers(len(shared_pool)))]
+            for j in range(int(rng.integers(2, 5))):
+                if mode == "concrete":
+                    p = float(rng.uniform(0.1, 2 * math.pi))
+                elif mode == "shared":
+                    # same-name affine chain: folds exactly to one Param
+                    p = Param(nm) * float(rng.choice([0.5, 1.0, 2.0])) \
+                        + float(rng.uniform(-0.5, 0.5))
+                else:
+                    # fresh names: the fold is NOT closed-form affine — the
+                    # merge pass must keep every gate
+                    p = Param(f"b{c.n_gates}_{j}")
+                c.add(name, *qs, params=(p,))
+        elif kind < 0.80 and n >= 3:
+            # diagonal burst + off-qubit non-diagonal gates: only commuting
+            # reorders can regroup these
+            for _ in range(int(rng.integers(2, 5))):
+                name = _DIAG_BURST[int(rng.integers(len(_DIAG_BURST)))]
+                gd = G.GATE_DEFS[name]
+                qs = qubits(gd.n_qubits)
+                params = tuple(float(rng.uniform(0.1, 2 * math.pi))
+                               for _ in range(gd.n_params))
+                c.add(name, *qs, params=params)
+                others = [q for q in range(n) if q not in qs]
+                if others and rng.random() < 0.5:
+                    c.add("h", int(rng.choice(others)))
+        else:
+            # plain noise gate from the full registry
+            pool = TWO_Q if (n >= 2 and rng.random() < 0.4) else ONE_Q
+            name = pool[int(rng.integers(len(pool)))]
+            gd = G.GATE_DEFS[name]
+            qs = qubits(gd.n_qubits)
+            params = []
+            for j in range(gd.n_params):
+                if param_mode != "concrete" and rng.random() < 0.3:
+                    params.append(Param(f"n{c.n_gates}_{j}"))
+                else:
+                    params.append(float(rng.uniform(0.1, 2 * math.pi)))
+            c.add(name, *qs, params=tuple(params))
+    if c.n_gates == 0:
+        c.add("h", 0)
+    return c
+
+
 def symbolize(c: Circuit) -> Circuit:
     """Replace every concrete angle with a fresh named Param (``p{gid}_{j}``)."""
     sym = Circuit(c.n_qubits)

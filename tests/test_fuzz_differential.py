@@ -14,6 +14,13 @@ binding + seed) to ``tests/fuzz_failures/seed_<seed>_<config>.py`` and
 embeds it in the failure message, so triage never starts from "seed 1234
 failed somewhere".
 
+``test_optimizer_differential_fuzz`` is the optimizer-on-vs-off variant:
+redundancy-rich circuits (``strategies.build_cancellation_circuit``) run
+through ``repro.core.optimize.optimize_circuit`` first, and the OPTIMIZED
+circuit must still reproduce the ORIGINAL circuit's oracle on every backend
+configuration — plus the rewrite must keep the free-parameter surface
+intact so bindings keep working.
+
 Budget: ``FUZZ_SEEDS`` env var selects how many seeds run (default 12 so
 tier-1 stays snappy; the CI ``fuzz`` job pins ``FUZZ_SEEDS=50`` on 1 and 8
 virtual devices). Seeds are stable: seed K is the same circuit in every
@@ -74,6 +81,65 @@ def _dump_repro(seed: int, config: str, c, binding, engine) -> str:
     with open(path, "w") as f:
         f.write(snippet + "\n")
     return snippet + f"\n# (written to {path})"
+
+
+def _cancel_case(seed: int):
+    """Deterministic redundancy-rich (circuit, binding, L, R) for one seed."""
+    rng = np.random.default_rng(2_000_029 * seed + 41)
+    n = int(rng.integers(2, 7))
+    n_blocks = int(rng.integers(3, 11))
+    c = strat.build_cancellation_circuit(n, n_blocks, seed,
+                                         param_mode="mixed")
+    L = int(rng.integers(min(max(2, n - 2), n), n + 1))
+    R = n - L
+    binding = strat.random_binding(c, seed + 1)
+    return c, binding, L, R
+
+
+@pytest.mark.parametrize("seed", range(FUZZ_SEEDS))
+def test_optimizer_differential_fuzz(seed):
+    """Optimizer-on vs optimizer-off: the optimized circuit must reproduce
+    the ORIGINAL circuit's oracle state on every backend configuration, and
+    the rewrite must preserve the circuit's free-parameter surface (so a
+    caller's binding dict keeps working verbatim)."""
+    from repro.core.optimize import optimize_circuit
+
+    c, binding, L, R = _cancel_case(seed)
+    oracle = simulate_np(c.bind(binding) if binding else c)
+
+    ores = optimize_circuit(c)
+    opt = ores.circuit
+    assert set(opt.param_names) == set(c.param_names), \
+        f"seed={seed}: optimizer changed the param-name surface " \
+        f"{sorted(c.param_names)} -> {sorted(opt.param_names)}"
+    assert opt.n_gates <= c.n_gates, f"seed={seed}: optimizer added gates"
+
+    plans = {}
+    for config, backend, use_pallas, cm in _configs(R):
+        cm_key = id(cm)
+        if cm_key not in plans:
+            plans[cm_key] = partition(
+                opt, L, R, 0,
+                **({"cost_model": cm} if cm is not None else {}))
+        eng = ExecutionEngine(opt, plans[cm_key], backend=backend,
+                              use_pallas=use_pallas)
+        if binding:
+            eng.bind(binding)
+        got = np.asarray(eng.run())
+        try:
+            assert_states_close(
+                got, oracle,
+                msg=f"seed={seed} config={config} L={L} R={R} "
+                    f"(optimizer on: {c.n_gates} -> {opt.n_gates} gates)")
+        except AssertionError as e:
+            spec = {"L": L, "R": R, "backend": backend,
+                    "use_pallas": use_pallas, "shm_cm": cm is not None}
+            raise AssertionError(
+                f"{e}\n{_dump_repro(seed, 'opt_' + config, c, binding, spec)}"
+                "\n# NOTE: snippet replays the ORIGINAL circuit; pass it "
+                "through repro.core.optimize.optimize_circuit to replay the "
+                "optimizer mismatch"
+            ) from None
 
 
 @pytest.mark.parametrize("seed", range(FUZZ_SEEDS))
