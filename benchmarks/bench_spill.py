@@ -1,0 +1,132 @@
+"""Spill-tier benchmark: DRAM-resident offload streaming vs the tiered
+:class:`repro.sim.shard_store.ShardStore` under a DRAM budget that forces at
+least half the shards to disk.
+
+Two claims are measured (and asserted — this harness doubles as a perf
+regression gate in CI):
+
+* **Capacity**: with a byte budget B the resident path caps out at
+  ``n_max = floor(log2(B / amp_bytes))`` qubits; the spill tier completes
+  circuits whose full statevector exceeds B. ``max_n_gain`` reports the
+  extra qubits the same budget buys.
+* **Overlap survives the tier**: spilled runs go through the same
+  double-buffered ping-pong stream (prefetch shard s+1 while s computes),
+  so ``spill_overlap`` must stay >= 0.8 and throughput must hold at least
+  a floor fraction of the DRAM-resident run (decode + disk I/O is hidden
+  behind compute, not serialized with it).
+
+Correctness rides along: the exact tier is bit-stable at rest, so every
+spilled run is checked against the dense oracle.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.generators import FAMILIES
+from repro.sim.engine import engine_for
+from repro.sim.shard_store import AT_REST_BYTES_PER_AMP
+
+# spilled throughput (amps/s) must hold at least this fraction of the
+# DRAM-resident run — generous because CI disks are slow and shared, but
+# enough to catch an accidentally serialized (non-overlapped) spill path
+THROUGHPUT_FLOOR = 0.2
+OVERLAP_FLOOR = 0.8
+AMP_BYTES = 8  # complex64
+
+
+def run(fam: str = "qft", ns=(12, 13, 14), L_gap: int = 4) -> List[Dict]:
+    rows = []
+    for n in ns:
+        L = n - L_gap
+        c = FAMILIES[fam](n)
+        total_bytes = AMP_BYTES * (1 << n)
+        # budget = a quarter of the statevector -> >= half (in fact 3/4)
+        # of the shards must live on disk at any time
+        budget = total_bytes // 4
+
+        oracle = engine_for(c, n, 0, 0, backend="dense", cache=None).run()
+        oracle = np.asarray(oracle).reshape(-1)
+
+        res_eng = engine_for(c, L, n - L, 0, backend="offload", cache=None)
+        t0 = time.time()
+        res_out = np.asarray(res_eng.run()).reshape(-1)
+        t_res = time.time() - t0
+
+        sp_eng = engine_for(c, L, n - L, 0, backend="offload", cache=None,
+                            storage=f"exact:dram_bytes={budget}")
+        t0 = time.time()
+        sp_out = np.asarray(sp_eng.run()).reshape(-1)
+        t_sp = time.time() - t0
+
+        snap = sp_eng.backend.storage_snapshot()
+        assert snap is not None, "spilled run produced no storage snapshot"
+        n_shards = snap["n_shards"]
+        spilled = snap["spilled_shards"]
+        assert spilled * 2 >= n_shards, (
+            f"budget did not force spilling: {spilled}/{n_shards} on disk")
+        # exact tier is bit-stable at rest: the spilled run must agree with
+        # the dense oracle as tightly as the resident run does
+        err_sp = float(np.max(np.abs(sp_out - oracle)))
+        err_res = float(np.max(np.abs(res_out - oracle)))
+        assert err_sp <= max(err_res * 4, 1e-5), (
+            f"spilled run diverged from oracle: {err_sp} vs resident {err_res}")
+        assert snap["error_bound"] == 0.0, "exact tier reported nonzero error"
+
+        overlap = sp_eng.backend.overlap_ratio
+        assert overlap >= OVERLAP_FLOOR, (
+            f"spilled overlap ratio {overlap:.3f} < {OVERLAP_FLOOR}")
+        thr_res = (1 << n) / max(t_res, 1e-9)
+        thr_sp = (1 << n) / max(t_sp, 1e-9)
+        assert thr_sp >= THROUGHPUT_FLOOR * thr_res, (
+            f"spilled throughput {thr_sp:.3g} amps/s fell below "
+            f"{THROUGHPUT_FLOOR}x of resident {thr_res:.3g}")
+
+        # capacity: largest n whose full statevector fits in the budget
+        # at the configured at-rest width, vs what we actually ran
+        at_rest = AT_REST_BYTES_PER_AMP["exact"]
+        resident_n_max = int(math.floor(math.log2(max(budget, 1) / at_rest)))
+        rows.append({
+            "family": fam, "n": n, "L": L, "budget_bytes": budget,
+            "resident_time_s": t_res, "spill_time_s": t_sp,
+            "slowdown": t_sp / max(t_res, 1e-9),
+            "n_shards": n_shards, "spilled_shards": spilled,
+            "spills": snap["spills"],
+            "spill_loads": snap["spill_loads"],
+            "spill_overlap": overlap,
+            "resident_overlap": res_eng.backend.overlap_ratio,
+            "resident_n_max": resident_n_max,
+            "max_n_gain": n - resident_n_max,
+            "oracle_err": err_sp,
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="qft")
+    ap.add_argument("--min-n", type=int, default=12)
+    ap.add_argument("--max-n", type=int, default=14)
+    ap.add_argument("--L-gap", type=int, default=4,
+                    help="L = n - L_gap (2^L_gap shards per stage)")
+    args = ap.parse_args(argv)
+    rows = run(args.family, range(args.min_n, args.max_n + 1), args.L_gap)
+    print("family,n,L,budget_bytes,resident_time_s,spill_time_s,slowdown,"
+          "n_shards,spilled_shards,spill_overlap,resident_n_max,max_n_gain,"
+          "oracle_err")
+    for r in rows:
+        print(f"{r['family']},{r['n']},{r['L']},{r['budget_bytes']},"
+              f"{r['resident_time_s']:.3f},{r['spill_time_s']:.3f},"
+              f"{r['slowdown']:.2f},{r['n_shards']},{r['spilled_shards']},"
+              f"{r['spill_overlap']:.3f},{r['resident_n_max']},"
+              f"{r['max_n_gain']},{r['oracle_err']:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

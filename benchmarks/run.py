@@ -9,6 +9,7 @@ Harness -> paper artifact map:
   bench_kernelize  -> Fig. 10 / Fig. 13 (kernelization cost + pruning sweep)
   bench_e2e        -> Fig. 5 (weak scaling, distributed executor)
   bench_offload    -> Fig. 7 / Fig. 8 (DRAM offloading vs QDAO-style)
+  bench_spill      -> spill tier: capacity gain + overlap under DRAM budget
   bench_breakdown  -> Fig. 6 (comm/comp breakdown)
   bench_sampling   -> measurement subsystem (shots/marginals/expectations)
   bench_engine     -> unified engine: compile cache + batched states (serving)
@@ -32,8 +33,9 @@ def main() -> None:
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument(
         "--skip", default="sim_dryrun",
-        help="comma list: staging,kernelize,e2e,offload,breakdown,sampling,"
-             "engine,param_sweep,vqe,serve,autotune,optimize,sim_dryrun",
+        help="comma list: staging,kernelize,e2e,offload,spill,breakdown,"
+             "sampling,engine,param_sweep,vqe,serve,autotune,optimize,"
+             "sim_dryrun",
     )
     ap.add_argument(
         "--json", default=None, metavar="PATH",
@@ -95,6 +97,19 @@ def main() -> None:
         overlap = rows[-1]["atlas_overlap"]
         summary.append(("bench_offload", 1e6 * dt / max(len(rows), 1),
                         f"transfer_reduction={ratio:.1f}x overlap={overlap:.2f}"))
+
+    if "spill" not in skip:
+        section("bench_spill (tiered shard store: capacity + overlap)")
+        from . import bench_spill
+
+        t0 = time.time()
+        rows = bench_spill.main([])
+        dt = time.time() - t0
+        best = max(rows, key=lambda r: r["max_n_gain"])
+        overlap = min(r["spill_overlap"] for r in rows)
+        summary.append(("bench_spill", 1e6 * dt / max(len(rows), 1),
+                        f"max_n_gain=+{best['max_n_gain']}q "
+                        f"spill_overlap>={overlap:.2f}"))
 
     if "breakdown" not in skip:
         section("bench_breakdown (Fig. 6: comm/comp fractions)")

@@ -53,6 +53,13 @@ SHM = 1
 HOST_LINK_GBPS = 32.0
 AMP_BYTES = 8  # complex64
 
+# disk/NVMe tier below host DRAM (the shard_store spill path): sequential
+# bandwidth of the device the spilled at-rest shards sit on, and the
+# at-rest bytes per amplitude (8 exact, 4 bf16, ~2 int8 — the tiered
+# shard store sets this from its StorageConfig).
+DISK_GBPS = 2.0
+AT_REST_BYTES = float(AMP_BYTES)
+
 # ILP staging communication weight: Eq. 2 prices a global-tier (inter-pod)
 # qubit swap at ``comm_weight`` local-tier swaps. Part of the cost model so
 # calibration / autotuning can vary it alongside the kernel constants.
@@ -83,6 +90,8 @@ class CostModel:
     host_link_gbps: float = HOST_LINK_GBPS
     amp_bytes: int = AMP_BYTES
     comm_weight: float = COMM_WEIGHT
+    disk_gbps: float = DISK_GBPS
+    at_rest_bytes: float = AT_REST_BYTES
 
     def fusion_cost(self, k: int) -> float:
         if k > self.max_fusion_qubits:
@@ -125,13 +134,26 @@ class CostModel:
         return min(finite, key=lambda k: self.fusion_cost(k) / k)
 
     # ------------------------------------------------------------- offload
-    def offload_pass_us(self, L: int) -> float:
+    def offload_pass_us(self, L: int, spill_fraction: float = 0.0) -> float:
         """Modeled host-link time for one read+write pass over a
         2^L-amplitude shard. With double-buffered streaming the link and the
         device overlap, so a stage's lower bound is max(link, HBM) rather
         than their sum — bench_offload's overlap ratio measures progress
-        against this."""
-        return 2 * self.amp_bytes * (1 << L) / (self.host_link_gbps * 1e3)
+        against this.
+
+        ``spill_fraction`` prices the tier the shards actually sit in: that
+        fraction of shards additionally crosses the disk tier at
+        ``at_rest_bytes`` per amplitude and ``disk_gbps`` bandwidth (the
+        shard_store spill path — see :meth:`spill_pass_us`)."""
+        link = 2 * self.amp_bytes * (1 << L) / (self.host_link_gbps * 1e3)
+        if spill_fraction <= 0.0:
+            return link
+        return link + min(spill_fraction, 1.0) * self.spill_pass_us(L)
+
+    def spill_pass_us(self, L: int) -> float:
+        """Modeled disk time for one read+write pass over a 2^L-amplitude
+        at-rest shard (``at_rest_bytes`` per amplitude each way)."""
+        return 2 * self.at_rest_bytes * (1 << L) / (self.disk_gbps * 1e3)
 
     def stage_pass_us(self, n_passes: int, L: int = 28) -> float:
         """HBM cost of a stage that executes in ``n_passes`` memory passes
@@ -175,6 +197,7 @@ class CostModel:
             "pass_us": 1e-3, "mxu_us_per_2k": 1e-6, "launch_us": 0.0,
             "shm_gate_us": 1e-4, "shm_diag_gate_us": 1e-4,
             "host_link_gbps": 1e-3, "comm_weight": 1e-3,
+            "disk_gbps": 1e-3, "at_rest_bytes": 0.25,
         }
         for f in fields(CostModel):
             name = f.name

@@ -49,6 +49,16 @@ def _pjit_mesh(R: int, G: int):
     return None
 
 
+def _print_storage_summary(ex):
+    snap = (getattr(ex, "provenance", None) or {}).get("storage")
+    if snap:
+        print(f"storage: {snap['spilled_shards']}/{snap['n_shards']} shards "
+              f"at rest on disk after run; {snap['spills']} spills, "
+              f"{snap['spill_loads']} reloads; error bound "
+              f"{snap['relative_error_bound']:.3e} "
+              f"(tol {snap['error_tolerance']})")
+
+
 def _parse_bind(specs):
     out = {}
     for spec in specs:
@@ -112,6 +122,22 @@ def main(argv=None):
                     help="comma-separated qubit subset (repeatable)")
     ap.add_argument("--observable", action="append", default=[],
                     help='Pauli sum, e.g. "Z0 Z1 + 0.5*X2" (repeatable)')
+    ap.add_argument("--storage", default=None, metavar="SPEC",
+                    help="tiered at-rest shard store for --executor offload "
+                         "(implies --engine): 'exact'|'bf16'|'int8' with "
+                         "optional ':dram_kib=N', ':dir=PATH', ':tol=X' — "
+                         "e.g. 'int8:dram_kib=4096'. Shards past the DRAM "
+                         "budget spill to disk; see README 'Scaling past "
+                         "DRAM'")
+    ap.add_argument("--dram-budget-mb", type=float, default=None,
+                    help="at-rest DRAM budget in MiB for --storage "
+                         "(overrides any dram_kib in the spec)")
+    ap.add_argument("--spill-dir", default=None,
+                    help="directory for spilled shard files (default: the "
+                         "system temp dir)")
+    ap.add_argument("--storage-tol", type=float, default=None,
+                    help="max accumulated quantization error bound before "
+                         "the run is rejected (default 0.05)")
     ap.add_argument("--bind", action="append", default=[], metavar="NAME=VAL",
                     help="bind one circuit parameter (repeatable); required "
                          "for parameterized families unless --sweep is given")
@@ -136,8 +162,25 @@ def main(argv=None):
     measuring = bool(args.shots or args.marginal or args.observable)
     marginals = [tuple(int(q) for q in spec.split(",")) for spec in args.marginal]
     binds = _parse_bind(args.bind)
+    storage = None
+    if args.storage is not None:
+        from ..sim.shard_store import StorageConfig
+
+        if args.executor != "offload":
+            ap.error("--storage requires --executor offload")
+        storage = StorageConfig.parse(args.storage)
+        if storage is not None:
+            over = {}
+            if args.dram_budget_mb is not None:
+                over["dram_bytes"] = int(args.dram_budget_mb * (1 << 20))
+            if args.spill_dir is not None:
+                over["spill_dir"] = args.spill_dir
+            if args.storage_tol is not None:
+                over["error_tolerance"] = args.storage_tol
+            if over:
+                storage = storage.with_overrides(**over)
     use_engine = (args.engine or args.autotune or args.batch > 1
-                  or args.executor == "dense"
+                  or args.executor == "dense" or storage is not None
                   or args.sweep is not None or args.vqe is not None)
     if use_engine and args.executor == "pergate":
         ap.error("--engine/--batch/--sweep do not support the pergate baseline")
@@ -171,9 +214,15 @@ def main(argv=None):
             circ, L, args.R, args.G, backend=args.executor,
             use_pallas=args.pallas, staging_method=args.staging,
             kernelize_method=args.kernelizer, optimize=args.opt,
-            backend_kw=backend_kw,
+            backend_kw=backend_kw, storage=storage,
         )
         plan = ex.plan
+        st_cfg = getattr(ex.backend, "storage", None)
+        if st_cfg is not None:
+            budget = ("unbounded" if st_cfg.dram_bytes is None
+                      else f"{st_cfg.dram_bytes / (1 << 20):.1f} MiB")
+            print(f"storage: at-rest {st_cfg.at_rest_dtype}, DRAM budget "
+                  f"{budget}, tol {st_cfg.error_tolerance}")
         print(f"engine[{ex.backend.name}] ready in {time.time() - t0:.2f}s; "
               f"cache: {len(DEFAULT_CACHE)} entries, {DEFAULT_CACHE.hits} hits"
               f"/{DEFAULT_CACHE.misses} misses")
@@ -313,6 +362,7 @@ def main(argv=None):
         dt = time.time() - t0
         print(f"batch of {B} simulated in {dt:.3f}s ({dt / B:.3f}s/state, "
               f"{B * circ.n_gates / dt:,.0f} gates/s)")
+        _print_storage_summary(ex)
         if args.check and n <= 24:
             for b in range(B):
                 f = fidelity(np.asarray(out[b]), simulate(circ, psi0=psi0s[b]))
@@ -356,6 +406,8 @@ def main(argv=None):
     dt = time.time() - t0
     print(f"simulated in {dt:.3f}s ({circ.n_gates / dt:,.0f} gates/s, "
           f"{2**n / dt / 1e6:,.1f} Mamps/s)")
+    if use_engine:
+        _print_storage_summary(ex)
 
     if measurer is not None:
         from ..sim.measure import measure_to_result

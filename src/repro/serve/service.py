@@ -232,6 +232,14 @@ class WarmPool:
             for k, e in entries
             if getattr(e, "provenance", {}).get("optimize")
         }
+        # tiered-storage (spill) summaries: offload engines running with an
+        # at-rest shard store report resident/spilled shard counts and the
+        # accumulated quantization error bound of their last run
+        out["storage_engines"] = {
+            k.digest[:12]: e.provenance["storage"]
+            for k, e in entries
+            if getattr(e, "provenance", {}).get("storage")
+        }
         return out
 
 

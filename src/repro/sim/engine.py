@@ -75,6 +75,7 @@ from .compile import (
     bind_tensors_sweep,
     compile_plan,
 )
+from .shard_store import ShardStore, StorageConfig
 
 
 # ======================================================================
@@ -832,11 +833,18 @@ class HostOffloadBackend(Backend):
     name = "offload"
 
     def __init__(self, jit_cache_size: int = 64,
-                 checkpoint_dir: Optional[str] = None):
+                 checkpoint_dir: Optional[str] = None,
+                 storage=None):
         self.jit_cache = JitCache(maxsize=jit_cache_size)
         # opt-in stage checkpointing: journal + state snapshot after every
         # completed stage so a killed long-run resumes instead of restarting
         self.checkpoint_dir = checkpoint_dir
+        # opt-in tiered at-rest storage (compressed DRAM tier + disk spill):
+        # when set, ``prepare`` returns a ShardStore instead of a dense host
+        # array and the stage loop streams shards through it. Mutually
+        # exclusive with stage checkpointing (the store IS the durable
+        # representation boundary; checkpointing a store would re-gather it).
+        self.storage: Optional[StorageConfig] = StorageConfig.coerce(storage)
 
     def setup(self, engine: "ExecutionEngine") -> None:
         super().setup(engine)
@@ -846,6 +854,7 @@ class HostOffloadBackend(Backend):
             "tensor_uploads": 0,  # full-tensor H2D uploads (once per op)
             "tensor_slice_reuse": 0,  # per-shard slices served from device
             "overlapped_dispatches": 0,  # shard s+1 in flight while s drains
+            "stage_streams": 0,  # _stream_stage invocations (one drain each)
             "memory_passes": 0,  # device HBM passes (top-level op count)
             "checkpointed_stages": 0,  # stage snapshots written (opt-in)
             "resumed_stages": 0,  # stages skipped on the last resume
@@ -862,6 +871,12 @@ class HostOffloadBackend(Backend):
         # take tensors as arguments, so they survive every rebinding)
         self._dev_slices.clear()
         self._uploaded.clear()
+        # sweep-mode slices are derived from a *previous* sweep's batched
+        # tensor tables — equally stale after a rebind. Clearing them here
+        # (not just in execute_sweep's finally) means an interrupted or
+        # raced sweep can never leak per-binding slices into the next run.
+        self._sweep_slices.clear()
+        self._sweep_consts = None
 
     # ------------------------------------------------------------ tensors
     def _dep_combo(self, op: Op, shard_id: int) -> int:
@@ -913,7 +928,9 @@ class HostOffloadBackend(Backend):
         return self.jit_cache.get(key, build)
 
     # -------------------------------------------------------------- eager
-    def _stream_stage(self, state: np.ndarray, prog: StageProgram) -> np.ndarray:
+    def _stream_stage(self, state, prog: StageProgram):
+        if isinstance(state, ShardStore):
+            return self._stream_stage_store(state, prog)
         eng = self.engine
         L = eng.L
         if faults._ACTIVE is not None:
@@ -924,6 +941,7 @@ class HostOffloadBackend(Backend):
                            sweep=self._sweep_consts is not None)
         flat = _flat_ops(prog.ops)
         self.stats["memory_passes"] += prog.n_passes
+        self.stats["stage_streams"] += 1
         n_shards = 1 << eng.n_nonlocal
         # double-buffered streaming: shard s+1 is uploaded and dispatched
         # BEFORE blocking on shard s's result, so H2D/compute/D2H overlap
@@ -951,21 +969,80 @@ class HostOffloadBackend(Backend):
         eng._record_time("offload_stage", (time.perf_counter() - t_stage) * 1e6)
         return state
 
-    def _remap(self, state: np.ndarray, slot, spec: RemapSpec) -> np.ndarray:
+    def _stream_stage_store(self, store: ShardStore, prog: StageProgram):
+        """The same double-buffered ping-pong loop over a tiered
+        :class:`ShardStore`: shard s+1's disk read + dequantize runs on the
+        store's prefetch worker while shard s computes on device, and shard
+        s-1's result re-encodes back into the store while s+1 is in flight —
+        the spill tier hides behind the same ``overlap_ratio``."""
+        eng = self.engine
+        if faults._ACTIVE is not None:
+            faults.maybe_inject("slow_stage", site="offload.stage")
+        t_stage = time.perf_counter()
+        batched = store.ndim == 2
+        fn = self.shard_fn(_op_sig(prog.ops), batched=batched,
+                           sweep=self._sweep_consts is not None)
+        flat = _flat_ops(prog.ops)
+        self.stats["memory_passes"] += prog.n_passes
+        self.stats["stage_streams"] += 1
+        n_shards = store.n_shards
+        fetch = store.prefetch(0)
+        pending = None  # (shard_id, in-flight device result)
+        for s in range(n_shards):
+            if faults._ACTIVE is not None:
+                faults.maybe_inject("shard_transfer_error",
+                                    site=f"offload.shard{s}")
+            tensors = [self.resolve(op, s) for op in flat]
+            block = fetch.result() if fetch is not None \
+                else store.get_decoded(s)
+            fetch = store.prefetch(s + 1) if s + 1 < n_shards else None
+            out = fn(jax.device_put(block), *tensors)
+            if pending is not None:
+                ps, pout = pending
+                store.put(ps, np.asarray(pout))
+                self.stats["overlapped_dispatches"] += 1
+            pending = (s, out)
+            self.stats["shard_transfers"] += 1
+        if pending is not None:
+            ps, pout = pending
+            store.put(ps, np.asarray(pout))
+        eng._record_time("offload_stage", (time.perf_counter() - t_stage) * 1e6)
+        return store
+
+    def _remap(self, state, slot, spec: RemapSpec):
         self.stats["host_remaps"] += 1
+        if isinstance(state, ShardStore):
+            return state.remap(spec, self.engine.n)
         return _np_remap(state, spec, self.engine.n)
 
     # ---------------------------------------------------------------- api
     @property
     def overlap_ratio(self) -> float:
-        """Fraction of shard dispatches issued while the previous shard was
-        still in flight (1 - stages/transfers at best: one drain per stage)."""
-        return self.stats["overlapped_dispatches"] / max(
-            self.stats["shard_transfers"], 1
-        )
+        """Fraction of *overlappable* shard dispatches issued while the
+        previous shard was still in flight. Each streamed stage must drain
+        its last shard, so ``shard_transfers - stage_streams`` is the
+        achievable maximum; with a single shard per stage no overlap is
+        possible at all and the ratio reports a vacuous 1.0 instead of a
+        misleading 0.0."""
+        possible = (self.stats["shard_transfers"]
+                    - self.stats.get("stage_streams", 0))
+        if possible <= 0:
+            return 1.0
+        return self.stats["overlapped_dispatches"] / possible
 
     def prepare(self, psi0, batch: bool = False):
         eng = self.engine
+        if self.storage is not None:
+            n_shards = 1 << eng.n_nonlocal
+            if batch:
+                arr = np.asarray(psi0, dtype=eng.np_dtype).reshape(
+                    -1, 1 << eng.n)
+                return ShardStore(n_shards, 1 << eng.L, (arr.shape[0],),
+                                  eng.np_dtype, self.storage).fill(arr)
+            state = (None if psi0 is None else
+                     np.asarray(psi0, dtype=eng.np_dtype).reshape(-1))
+            return ShardStore(n_shards, 1 << eng.L, (), eng.np_dtype,
+                              self.storage).fill(state)
         if batch:
             arr = np.array(psi0, dtype=eng.np_dtype).reshape(-1, 1 << eng.n)
             return arr
@@ -977,12 +1054,35 @@ class HostOffloadBackend(Backend):
         return state
 
     def execute(self, state, apply_final: bool = True):
-        if self.checkpoint_dir is not None and state.ndim == 1:
+        if isinstance(state, ShardStore):
+            return self._execute_store(state, apply_final)
+        if self.checkpoint_dir is not None and isinstance(state, np.ndarray):
             return self._execute_checkpointed(state, apply_final)
         return self.engine.stage_loop(state, self._stream_stage, self._remap, apply_final)
 
     def execute_batch(self, states, apply_final: bool = True):
         return self.execute(states, apply_final)  # primitives are batch-aware
+
+    def _execute_store(self, store: ShardStore, apply_final: bool):
+        """The stage loop over a tiered :class:`ShardStore`, then the
+        storage contract checks: reject the run if the accumulated
+        quantization error bound exceeds the configured tolerance (typed
+        :class:`repro.sim.faults.StorageToleranceError` — never a silently
+        less-accurate result), surface the per-run storage summary in
+        ``engine.provenance["storage"]``, and gather the decoded state."""
+        try:
+            store = self.engine.stage_loop(store, self._stream_stage,
+                                           self._remap, apply_final)
+            store.check_tolerance()
+            self.engine.provenance["storage"] = store.snapshot()
+            return store.gather()
+        finally:
+            store.close()
+
+    def storage_snapshot(self) -> Optional[Dict]:
+        """The last storage-tier run summary (None when tiered storage is
+        off or no run has completed) — the serving stats read this."""
+        return self.engine.provenance.get("storage")
 
     # -------------------------------------------------- stage checkpointing
     def _run_sig(self, state: np.ndarray) -> str:
@@ -993,7 +1093,11 @@ class HostOffloadBackend(Backend):
         h = hashlib.sha256()
         h.update(repr(eng.circuit.structure_fingerprint()).encode())
         h.update(repr(eng.bound_circuit.binding_signature()).encode())
-        h.update(repr((eng.n, eng.L, eng.R, eng.G, str(eng.np_dtype))).encode())
+        # state.shape is part of the identity: a [B, 2^L] batch and a flat
+        # [B * 2^L] state serialize to the same bytes, and resuming one
+        # into the other would silently mix runs
+        h.update(repr((eng.n, eng.L, eng.R, eng.G, str(eng.np_dtype),
+                       tuple(state.shape))).encode())
         h.update(state.tobytes())
         return h.hexdigest()
 
@@ -1062,10 +1166,16 @@ class HostOffloadBackend(Backend):
         tensors carry the binding axis — one host<->device pass covers all P
         parameter points."""
         P_ = next(iter(consts_b.values())).shape[0] if consts_b else 1
-        states = np.repeat(np.asarray(state).reshape(1, -1), P_, axis=0)
+        if isinstance(state, ShardStore):
+            states = state.tile(P_)
+            state.close()
+        else:
+            states = np.repeat(np.asarray(state).reshape(1, -1), P_, axis=0)
         self._sweep_consts = consts_b
         self._sweep_slices = {}
         try:
+            if isinstance(states, ShardStore):
+                return self._execute_store(states, apply_final)
             return self.engine.stage_loop(states, self._stream_stage,
                                           self._remap, apply_final)
         finally:
@@ -1220,14 +1330,15 @@ class ExecutionEngine:
         if bound.structure_fingerprint() != self.circuit.structure_fingerprint():
             raise ValueError("bind_circuit: circuit structure does not match "
                              "this engine's compiled structure")
-        table = bind_tensors(bound, self.plan, dtype=self.np_dtype,
-                             peephole=self.peephole, expect=self.cc,
-                             struct_cache=self._struct_cache)
-        self.consts = {uid: jnp.asarray(t, dtype=self.dtype)
-                       for uid, t in table.items()}
-        self.bound_circuit = bound
-        self.bind_count += 1
-        self.backend.on_rebind()
+        with self.lock:
+            table = bind_tensors(bound, self.plan, dtype=self.np_dtype,
+                                 peephole=self.peephole, expect=self.cc,
+                                 struct_cache=self._struct_cache)
+            self.consts = {uid: jnp.asarray(t, dtype=self.dtype)
+                           for uid, t in table.items()}
+            self.bound_circuit = bound
+            self.bind_count += 1
+            self.backend.on_rebind()
         return self
 
     def _require_bound(self) -> None:
@@ -1366,15 +1477,16 @@ class ExecutionEngine:
         the circuit parameters first — a tensor swap, never a recompile.
         ``verify`` turns on the post-run norm integrity guard (NaN blowups
         become one dense-oracle retry, then a typed IntegrityError)."""
-        if params is not None:
-            self.bind(params)
-        self._require_bound()
-        if faults._ACTIVE is not None:
-            faults.maybe_inject("slow_stage", site="engine.run")
-        t0 = time.perf_counter()
-        state = self.backend.prepare(psi0)
-        out = self.backend.extract(self.backend.execute(state, True))
-        self._record_time("run", (time.perf_counter() - t0) * 1e6)
+        with self.lock:
+            if params is not None:
+                self.bind(params)
+            self._require_bound()
+            if faults._ACTIVE is not None:
+                faults.maybe_inject("slow_stage", site="engine.run")
+            t0 = time.perf_counter()
+            state = self.backend.prepare(psi0)
+            out = self.backend.extract(self.backend.execute(state, True))
+            self._record_time("run", (time.perf_counter() - t0) * 1e6)
         if faults._ACTIVE is not None and faults.should_corrupt("engine.run"):
             out = self._poison(out)
         if verify:
@@ -1387,14 +1499,15 @@ class ExecutionEngine:
         Pair with :attr:`measurement_frame` and :mod:`repro.sim.measure` —
         sampling/marginals/expectations undo the layout on indices, which is
         far cheaper than permuting 2^n amplitudes."""
-        if params is not None:
-            self.bind(params)
-        self._require_bound()
-        if faults._ACTIVE is not None:
-            faults.maybe_inject("slow_stage", site="engine.run")
-        t0 = time.perf_counter()
-        out = self.backend.execute(self.backend.prepare(psi0), False)
-        self._record_time("run_packed", (time.perf_counter() - t0) * 1e6)
+        with self.lock:
+            if params is not None:
+                self.bind(params)
+            self._require_bound()
+            if faults._ACTIVE is not None:
+                faults.maybe_inject("slow_stage", site="engine.run")
+            t0 = time.perf_counter()
+            out = self.backend.execute(self.backend.prepare(psi0), False)
+            self._record_time("run_packed", (time.perf_counter() - t0) * 1e6)
         if faults._ACTIVE is not None and faults.should_corrupt("engine.run"):
             out = self._poison(out)
         if verify:
@@ -1406,12 +1519,13 @@ class ExecutionEngine:
         shard program. Returns ``[B, 2^n]`` in logical order, or the batched
         packed layout when ``apply_final=False`` (measure each element via
         :func:`repro.sim.measure.measure_batch`)."""
-        self._require_bound()
-        t0 = time.perf_counter()
-        states = self.backend.prepare(psi0s, batch=True)
-        out = self.backend.execute_batch(states, apply_final)
-        out = self.backend.extract(out, batch=True) if apply_final else out
-        self._record_time("run_batch", (time.perf_counter() - t0) * 1e6)
+        with self.lock:
+            self._require_bound()
+            t0 = time.perf_counter()
+            states = self.backend.prepare(psi0s, batch=True)
+            out = self.backend.execute_batch(states, apply_final)
+            out = self.backend.extract(out, batch=True) if apply_final else out
+            self._record_time("run_batch", (time.perf_counter() - t0) * 1e6)
         return out
 
     def run_sweep(self, psi0, params_batch, apply_final: bool = True,
@@ -1432,31 +1546,36 @@ class ExecutionEngine:
         if not points:
             raise ValueError("empty params_batch")
         t0 = time.perf_counter()
-        if self.backend.supports_fused_sweep():
-            if faults._ACTIVE is not None:
-                faults.maybe_inject("slow_stage", site="engine.run_sweep")
-            tables_b = bind_tensors_sweep(
-                [self.circuit.bind(pt) for pt in points], self.plan,
-                dtype=self.np_dtype, peephole=self.peephole,
-                expect=self.cc, struct_cache=self._struct_cache)
-            batched = {
-                uid: jnp.asarray(t, dtype=self.dtype)
-                for uid, t in tables_b.items()
-            }
-            state = self.backend.prepare(psi0)
-            out = self.backend.execute_sweep(state, batched, apply_final)
-            out = self.backend.extract(out, batch=True) if apply_final else out
-        else:
-            outs = []
-            for pt in points:
-                self.bind(pt)
-                o = self.run(psi0) if apply_final else self.run_packed(psi0)
-                outs.append(np.asarray(o).reshape(-1) if apply_final else o)
-            if apply_final or isinstance(outs[0], np.ndarray):
-                out = np.stack(outs)
+        # the fused path parks per-sweep tensor tables on the backend
+        # (``_sweep_consts``/``_sweep_slices``): without the lock two
+        # concurrent sweeps interleave on that shared state and one of them
+        # silently reads the other's (or the placeholder) tensors
+        with self.lock:
+            if self.backend.supports_fused_sweep():
+                if faults._ACTIVE is not None:
+                    faults.maybe_inject("slow_stage", site="engine.run_sweep")
+                tables_b = bind_tensors_sweep(
+                    [self.circuit.bind(pt) for pt in points], self.plan,
+                    dtype=self.np_dtype, peephole=self.peephole,
+                    expect=self.cc, struct_cache=self._struct_cache)
+                batched = {
+                    uid: jnp.asarray(t, dtype=self.dtype)
+                    for uid, t in tables_b.items()
+                }
+                state = self.backend.prepare(psi0)
+                out = self.backend.execute_sweep(state, batched, apply_final)
+                out = self.backend.extract(out, batch=True) if apply_final else out
             else:
-                out = jnp.stack(outs)
-        self._record_time("run_sweep", (time.perf_counter() - t0) * 1e6)
+                outs = []
+                for pt in points:
+                    self.bind(pt)
+                    o = self.run(psi0) if apply_final else self.run_packed(psi0)
+                    outs.append(np.asarray(o).reshape(-1) if apply_final else o)
+                if apply_final or isinstance(outs[0], np.ndarray):
+                    out = np.stack(outs)
+                else:
+                    out = jnp.stack(outs)
+            self._record_time("run_sweep", (time.perf_counter() - t0) * 1e6)
         if faults._ACTIVE is not None and faults.should_corrupt("engine.run_sweep"):
             out = self._poison_row(out, len(points))
         if verify:
@@ -1617,6 +1736,8 @@ def _placement_fingerprint(backend_kw: Optional[dict]) -> Tuple:
                  tuple(d.id for d in np.asarray(v.devices).flat))
         elif isinstance(v, (list, tuple)) and v and hasattr(v[0], "id"):
             v = tuple(d.id for d in v)  # a device list
+        elif isinstance(v, StorageConfig):
+            v = v.fingerprint()  # compressed vs exact plans never collide
         else:
             v = _canon(v)
         out.append((k, v))
@@ -1792,6 +1913,7 @@ def circuit_key_for(
     cost_model: Optional[CostModel] = None,
     optimize=False,
     backend_kw: Optional[dict] = None,
+    storage=None,
     _pre_optimized: bool = False,
     **plan_kw,
 ) -> CircuitKey:
@@ -1805,7 +1927,15 @@ def circuit_key_for(
     structures (value-dependent identity drops), and each optimized
     structure must own its own engine. ``_pre_optimized=True`` tells this
     function that ``circuit`` already IS the optimizer output
-    (:func:`engine_for` uses this to avoid optimizing twice)."""
+    (:func:`engine_for` uses this to avoid optimizing twice).
+
+    ``storage`` (a :class:`repro.sim.shard_store.StorageConfig`, spec
+    string or dict) folds the at-rest storage fingerprint into the key via
+    ``backend_kw`` — a compressed-tier plan and an exact plan for the same
+    structure must never share a cached engine."""
+    storage = StorageConfig.coerce(storage)
+    if storage is not None:
+        backend_kw = dict(backend_kw or {}, storage=storage)
     ocfg = copt.resolve_config(optimize)
     if ocfg is not None and not _pre_optimized:
         circuit = copt.optimize_circuit(circuit, ocfg).circuit
@@ -1958,6 +2088,7 @@ def engine_for(
     cache: Optional[CompileCache] = DEFAULT_CACHE,
     plan: Optional[SimulationPlan] = None,
     backend_kw: Optional[dict] = None,
+    storage=None,
     degrade: bool = True,
     **plan_kw,
 ) -> ExecutionEngine:
@@ -1986,7 +2117,34 @@ def engine_for(
     for the literal circuit). ``backend_kw`` (e.g. a pjit mesh) IS part of
     the key, via a placement fingerprint, so requests with different
     meshes/devices never share a cached engine.
+
+    ``storage`` turns on the offload backend's tiered at-rest shard store
+    (a :class:`repro.sim.shard_store.StorageConfig`, a spec string like
+    ``"int8:dram_kib=64"``, or a dict; requires ``backend="offload"``).
+    The ``REPRO_STORAGE`` env var supplies a default for offload engines
+    that don't pass one (skipped when ``checkpoint_dir`` is in play — the
+    store and stage checkpointing are mutually exclusive). The config
+    reaches the backend via ``backend_kw`` (so it is part of the key and
+    is dropped by the degradation ladder's dense fallback), and the cost
+    model is re-priced for the tier the shards actually sit in:
+    ``at_rest_bytes`` from the at-rest dtype, the ILP ``comm_weight``
+    scaled by the spill-aware offload pass time.
     """
+    storage = StorageConfig.coerce(storage)
+    if storage is None and backend_kw:
+        storage = StorageConfig.coerce(backend_kw.get("storage"))
+    if (storage is None and backend == "offload"
+            and not (backend_kw or {}).get("checkpoint_dir")):
+        storage = StorageConfig.from_env()
+    if storage is not None and backend != "offload":
+        raise ValueError(
+            f"storage= requires backend='offload' (got {backend!r}); the "
+            "tiered shard store only exists under the host-offload path")
+    base_cost_model = cost_model
+    if storage is not None:
+        backend_kw = dict(backend_kw or {}, storage=storage)
+        cost_model = storage.apply_to_cost_model(
+            _resolve_cost_model(cost_model), circuit.n_qubits, L)
     ocfg = copt.resolve_config(optimize)
     if plan is not None:
         if ocfg is not None:
@@ -2001,7 +2159,7 @@ def engine_for(
     if ocfg is not None:
         opt_result = copt.optimize_circuit(circuit, ocfg)
         circuit = opt_result.circuit
-    explicit_cm = cost_model is not None
+    explicit_cm = base_cost_model is not None
     cost_model = _resolve_cost_model(cost_model)
     key = circuit_key_for(
         circuit, L, R, G, backend=backend, dtype=dtype, use_pallas=use_pallas,
@@ -2103,7 +2261,7 @@ def engine_for(
             source_circuit, L, R, G, backend=backend, dtype=dtype,
             use_pallas=use_pallas, peephole=peephole,
             staging_method=staging_method, kernelize_method=kernelize_method,
-            cost_model=cost_model if explicit_cm else None,
+            cost_model=base_cost_model,
             optimize=optimize, cache=None, backend_kw=backend_kw,
-            degrade=degrade, **plan_kw)
+            storage=storage, degrade=degrade, **plan_kw)
     return eng

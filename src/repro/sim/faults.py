@@ -90,6 +90,21 @@ class ShardTransferError(FaultError):
     nature: the serving layer retries with exponential backoff."""
 
 
+class SpillIOError(ShardTransferError):
+    """A disk-tier spill write or reload failed mid-run (tiered shard
+    store). Subclasses :class:`ShardTransferError` so the serving retry
+    loop treats it as transient; spill writes are atomic (tmp+rename), so
+    a failed spill can abort a run but never corrupt an at-rest shard."""
+
+
+class StorageToleranceError(FaultError):
+    """The tiered shard store's accumulated quantization error bound
+    exceeded the configured tolerance — the run's result would be less
+    accurate than the storage config promises. Not transient: retrying
+    the same config re-accumulates the same error; pick a wider tolerance
+    or a higher-precision at-rest dtype."""
+
+
 class IntegrityError(FaultError):
     """The post-run ||psi|| =~ 1 guard failed AND the dense-oracle retry
     also failed — the result is numerically poisoned, not recoverable."""
@@ -136,6 +151,7 @@ POINTS = (
     "xla_trace_error",       # sim/compile.compile_plan + backend setup -> XlaTraceError
     "pallas_lowering_error",  # engine init w/ use_pallas -> PallasLoweringError
     "shard_transfer_error",  # offload shard streaming -> ShardTransferError
+    "spill_io_error",        # shard_store disk spill/reload -> SpillIOError
     "nan_amplitudes",        # post-run state corruption (no exception)
     "slow_stage",            # injected latency (no exception)
 )
@@ -146,6 +162,7 @@ _ERROR_FOR = {
     "xla_trace_error": XlaTraceError,
     "pallas_lowering_error": PallasLoweringError,
     "shard_transfer_error": ShardTransferError,
+    "spill_io_error": SpillIOError,
 }
 
 

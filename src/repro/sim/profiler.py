@@ -47,7 +47,10 @@ import numpy as np
 
 from ..core.cost_model import CostModel, DEFAULT_COST_MODEL
 
-CALIBRATION_VERSION = 1
+# v2: adds the "disk" section (disk_gbps for the shard_store spill tier).
+# Files written by older versions miss fields the cost model now prices, so
+# resolve_calibration treats a version mismatch like a fingerprint mismatch.
+CALIBRATION_VERSION = 2
 CALIBRATION_FILENAME = "calibration.json"
 REFERENCE_L = 28  # the cost model's reference shard: 2^28 amplitudes
 
@@ -231,6 +234,49 @@ def profile_host_link(L: int, repeats: int = 5,
             "raw": {"L": L, "roundtrip_us": t_us, "bytes": nbytes}}
 
 
+def profile_disk(L: int, repeats: int = 5,
+                 rng: Optional[np.random.Generator] = None,
+                 spill_dir: Optional[str] = None) -> Dict:
+    """Spill-tier bandwidth: an fsync'd write + read round trip of one
+    2^L-amplitude at-rest shard file — exactly the per-shard motion of the
+    :mod:`repro.sim.shard_store` disk tier (atomic tmp+rename on the write
+    side, like the store itself). Maps to ``disk_gbps`` (scale-free)."""
+    import tempfile
+
+    rng = rng or np.random.default_rng(0)
+    block = (rng.standard_normal(1 << L) +
+             1j * rng.standard_normal(1 << L)).astype(np.complex64)
+    d = spill_dir or tempfile.gettempdir()
+    path = os.path.join(d, f"repro-profile-disk-{os.getpid()}.npy")
+
+    def roundtrip(b):
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.save(f, b)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return np.load(path)
+
+    try:
+        best = math.inf
+        roundtrip(block)  # warmup (page cache, allocator)
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            roundtrip(block)
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        for p in (path, path + ".tmp"):
+            if os.path.exists(p):
+                os.remove(p)
+    t_us = best * 1e6
+    nbytes = 2 * block.nbytes  # write + read
+    gbps = nbytes / max(t_us, 1e-3) / 1e3  # bytes/us -> GB/s
+    return {"disk_gbps": gbps,
+            "raw": {"L": L, "roundtrip_us": t_us, "bytes": nbytes,
+                    "dir": d}}
+
+
 # ======================================================================
 # Full profile run
 # ======================================================================
@@ -252,11 +298,13 @@ def run_profile(fast: bool = True, L: Optional[int] = None,
         profile_fusion(L, repeats=repeats, rng=rng),
         profile_shm(L, repeats=repeats, rng=rng),
         profile_host_link(L, repeats=repeats, rng=rng),
+        profile_disk(L, repeats=repeats, rng=rng),
     ]
     measurements: Dict[str, float] = {}
     raw: Dict[str, Dict] = {}
     for name, sec in zip(
-            ("dispatch", "pass", "fusion", "shm", "host_link"), sections):
+            ("dispatch", "pass", "fusion", "shm", "host_link", "disk"),
+            sections):
         raw[name] = sec.pop("raw", {})
         measurements.update(sec)
     cm = CostModel.from_calibration(measurements)
@@ -343,7 +391,14 @@ def resolve_calibration(path: Optional[str] = None, *,
         here = fingerprint_digest(device_fingerprint())
         there = fingerprint_digest(calib.get("fingerprint", {}))
         info["fingerprint"] = there
-        if here != there:
+        ver = int(calib.get("version", 0))
+        if ver != CALIBRATION_VERSION:
+            # a file from another schema version misses (or mis-scales)
+            # fields the model now prices — fall back to analytic, loudly
+            info["source"] = "version_mismatch"
+            info["file_version"] = ver
+            info["expected_version"] = CALIBRATION_VERSION
+        elif here != there:
             info["source"] = "mismatch"
             info["local_fingerprint"] = here
         else:

@@ -282,3 +282,96 @@ def test_measure_batch_per_state_results(qft_case):
 
 def test_backend_registry_complete():
     assert set(BACKENDS) == {"pjit", "shardmap", "offload", "dense"}
+
+
+# ------------------------------------------- offload sweep-state hygiene
+def test_on_rebind_clears_stale_sweep_state():
+    """Regression: a raced/interrupted fused sweep leaves per-binding sweep
+    tables (``_sweep_consts``/``_sweep_slices``) on the offload backend;
+    ``on_rebind`` must drop them, or the next plain ``run`` resolves
+    ``[P, ...]`` sweep slices into a non-sweep shard stream."""
+    from test_params import _ansatz, _vals
+
+    n = 6
+    sym = _ansatz(n)
+    plan = partition(sym, 4, 2, 0)
+    eng = ExecutionEngine(sym, plan, backend="offload")
+    batch = np.stack([_vals(n, s) for s in (7, 8)])
+
+    captured = {}
+    orig = eng.backend._stream_stage
+
+    def spy(state, prog):
+        if eng.backend._sweep_consts is not None and not captured:
+            captured["consts"] = eng.backend._sweep_consts
+            captured["slices"] = dict(eng.backend._sweep_slices)
+        return orig(state, prog)
+
+    eng.backend._stream_stage = spy
+    eng.run_sweep(None, batch)
+    del eng.backend._stream_stage
+    assert "consts" in captured, "sweep never went through the spy"
+
+    # simulate the race: the sweep's tables are still parked on the backend
+    # when a rebind lands (pre-fix, on_rebind left them in place)
+    eng.backend._sweep_consts = captured["consts"]
+    eng.backend._sweep_slices.update(captured["slices"])
+    vals2 = _vals(n, 9)
+    eng.bind(dict(zip(sym.param_names, vals2)))
+    assert eng.backend._sweep_consts is None
+    assert not eng.backend._sweep_slices
+    assert_states_close(np.asarray(eng.run()),
+                        simulate_np(_ansatz(n, vals2)))
+
+
+def test_concurrent_sweep_and_run_stay_correct():
+    """run/run_sweep on one engine from two threads: the engine lock must
+    serialize them (the fused sweep parks shared per-binding state on the
+    backend; unserialized, the plain run reads the sweep's tensors)."""
+    import threading
+
+    from test_params import _ansatz, _vals
+
+    n = 6
+    sym = _ansatz(n)
+    plan = partition(sym, 4, 2, 0)
+    eng = ExecutionEngine(sym, plan, backend="offload")
+    vals = _vals(n, 3)
+    eng.bind(dict(zip(sym.param_names, vals)))
+    ref_run = simulate_np(_ansatz(n, vals))
+    batch = np.stack([_vals(n, s) for s in (7, 8)])
+    refs_sweep = [simulate_np(_ansatz(n, list(batch[p]))) for p in range(2)]
+
+    for _ in range(3):
+        results, errs = {}, []
+
+        def worker(name, fn):
+            try:
+                results[name] = np.asarray(fn())
+            except Exception as e:  # noqa: BLE001 - surfaced via errs
+                errs.append(e)
+
+        ts = [threading.Thread(target=worker,
+                               args=("sweep", lambda: eng.run_sweep(None, batch))),
+              threading.Thread(target=worker, args=("run", eng.run))]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(60)
+        assert not errs, errs
+        for p in range(2):
+            assert_states_close(results["sweep"][p], refs_sweep[p],
+                                msg=f"sweep point {p}")
+        assert_states_close(results["run"], ref_run, msg="plain run")
+
+
+def test_overlap_ratio_single_shard_is_vacuous_one():
+    """With one shard per stage no dispatch can overlap the previous one:
+    the ratio must report a vacuous 1.0, not a misleading 0.0."""
+    c = gen.random_circuit(6, 16, seed=2)
+    eng = engine_for(c, 6, 0, 0, backend="offload", cache=None)
+    out = np.asarray(eng.run())
+    assert eng.stats["shard_transfers"] > 0
+    assert eng.stats["overlapped_dispatches"] == 0
+    assert eng.backend.overlap_ratio == 1.0
+    assert_states_close(out, simulate_np(c))

@@ -401,6 +401,55 @@ def test_offload_checkpoint_ignores_other_runs_journal(tmp_path):
                                atol=1e-5)
 
 
+def _batch_states(n, B, seed=0):
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((B, 1 << n)) + 1j * rng.standard_normal((B, 1 << n))
+    return (z / np.linalg.norm(z, axis=1, keepdims=True)).astype(np.complex64)
+
+
+def test_offload_checkpoint_kill_and_resume_batched(tmp_path):
+    """Batched [B, 2^n] runs checkpoint and resume like flat ones — the
+    run signature includes the state shape, so the journal can only be
+    adopted by a run of the same batch shape."""
+    circ = random_circuit(9, 80, seed=7)
+    psi0s = _batch_states(9, 2)
+    refs = [simulate_np(circ, psi0=psi0s[b]).astype(np.complex64)
+            for b in range(2)]
+    kw = dict(L=7, R=2, G=0, backend="offload", cache=None,
+              backend_kw={"checkpoint_dir": str(tmp_path)})
+    with faults.inject(FaultPlan(seed=1).add("shard_transfer_error",
+                                             after=5, count=1)):
+        eng = engine_for(circ, **kw)
+        with pytest.raises(ShardTransferError):
+            eng.run_batch(psi0s)
+    assert eng.stats["checkpointed_stages"] > 0
+    assert os.path.exists(tmp_path / "journal.json")
+    eng2 = engine_for(circ, **kw)
+    outs = np.asarray(eng2.run_batch(psi0s))
+    assert eng2.stats["resumed_stages"] > 0
+    for b in range(2):
+        np.testing.assert_allclose(outs[b], refs[b], atol=1e-5)
+    assert not os.path.exists(tmp_path / "journal.json")
+
+
+def test_offload_checkpoint_batch_shape_is_run_identity(tmp_path):
+    """A flat run must never adopt a batched run's journal (and vice
+    versa): [B, 2^L] resumed into [2^n] would silently mix runs."""
+    circ = random_circuit(9, 80, seed=7)
+    kw = dict(L=7, R=2, G=0, backend="offload", cache=None,
+              backend_kw={"checkpoint_dir": str(tmp_path)})
+    with faults.inject(FaultPlan(seed=1).add("shard_transfer_error",
+                                             after=5, count=1)):
+        with pytest.raises(ShardTransferError):
+            engine_for(circ, **kw).run_batch(_batch_states(9, 2))
+    assert os.path.exists(tmp_path / "journal.json")
+    eng = engine_for(circ, **kw)
+    out = np.asarray(eng.run())
+    assert eng.stats["resumed_stages"] == 0
+    np.testing.assert_allclose(out, simulate_np(circ).astype(np.complex64),
+                               atol=1e-5)
+
+
 def test_run_journal_fsyncs_before_rename(tmp_path, monkeypatch):
     calls = []
     real_fsync = os.fsync
@@ -584,6 +633,10 @@ MATRIX_CONFIGS = [
     pytest.param(dict(backend="pjit", L=6), id="pjit"),
     pytest.param(dict(backend="pjit", L=6, use_pallas=True), id="pjit-pallas"),
     pytest.param(dict(backend="offload", L=5, R=1), id="offload"),
+    # spill tier: a DRAM budget of one exact 2^5-amp shard forces the
+    # other shard to disk, so spill read/write probes actually fire
+    pytest.param(dict(backend="offload", L=5, R=1,
+                      storage="exact:dram_bytes=256"), id="offload-spill"),
 ]
 
 

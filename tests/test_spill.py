@@ -1,0 +1,370 @@
+"""Tiered shard store (:mod:`repro.sim.shard_store`): the spill tier's
+correctness contracts.
+
+* at-rest codecs (exact/bf16/int8): reported encode error is EXACT, decode
+  is lossless from the encoded form, exact tier is bit-stable;
+* seeded LRU eviction matches a reference model (property test);
+* spill-then-reload bit-stability for the exact tier (disk stores the
+  encoded payload — a round trip adds zero error);
+* engine runs under a DRAM budget that forces spilling match the dense
+  oracle within the *reported* error bound, across run / run_batch /
+  run_sweep and all three tiers;
+* the tolerance contract: a bound past ``error_tolerance`` raises a typed
+  :class:`StorageToleranceError`, never a silently inaccurate result;
+* ``spill_io_error`` injection surfaces as a typed, transient
+  :class:`SpillIOError` — never silent corruption;
+* storage config is part of the CircuitKey (compressed and exact plans
+  never collide) and reaches offload engines via ``REPRO_STORAGE``;
+* the cost model prices the disk tier (``offload_pass_us`` spill term,
+  calibration floors, calibration-file version gate).
+"""
+
+import os
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from conftest import assert_states_close
+
+from repro.core.cost_model import CostModel, DEFAULT_COST_MODEL
+from repro.core.generators import random_circuit
+from repro.sim import faults, profiler
+from repro.sim.engine import circuit_key_for, engine_for
+from repro.sim.faults import (
+    FaultPlan,
+    ShardTransferError,
+    SpillIOError,
+    StorageToleranceError,
+    TRANSIENT_ERRORS,
+)
+from repro.sim.shard_store import (
+    AT_REST_BYTES_PER_AMP,
+    AT_REST_DTYPES,
+    ShardStore,
+    StorageConfig,
+    decode_shard,
+    encode_shard,
+)
+from repro.sim.statevector import simulate_np
+from test_params import _ansatz, _vals  # noqa: F401  (ansatz helpers)
+
+C8 = random_circuit(8, 40, seed=5)
+REF8 = simulate_np(C8).astype(np.complex64)
+
+# a budget of 1 KiB holds at most 2 exact 2^5-amplitude shards: with
+# L=5, R=3 (8 shards) at least 6 must live on disk at any moment
+TINY = "exact:dram_kib=1"
+
+
+def _rand_shard(rng, shape=(64,)):
+    z = rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
+    return z.astype(np.complex64)
+
+
+# ======================================================================
+# codecs
+# ======================================================================
+
+@pytest.mark.parametrize("mode", AT_REST_DTYPES)
+def test_codec_reported_error_is_exact(mode):
+    rng = np.random.default_rng(0)
+    arr = _rand_shard(rng, (512,))
+    enc, err = encode_shard(arr, mode)
+    out = decode_shard(enc)
+    assert out.shape == arr.shape and out.dtype == arr.dtype
+    actual = float(np.linalg.norm((out - arr).view(np.float32)))
+    assert err == pytest.approx(actual, rel=1e-5, abs=1e-9)
+    if mode == "exact":
+        assert err == 0.0 and np.array_equal(out, arr)
+    else:
+        assert 0.0 < err < 0.05 * np.linalg.norm(arr)
+
+
+@pytest.mark.parametrize("mode", AT_REST_DTYPES)
+def test_codec_decode_is_lossless_from_encoded(mode):
+    # decode is a pure function of the Encoded parts: decoding twice (as a
+    # spill round trip does) yields bit-identical arrays
+    arr = _rand_shard(np.random.default_rng(1), (2, 128))
+    enc, _ = encode_shard(arr, mode)
+    assert np.array_equal(decode_shard(enc), decode_shard(enc))
+
+
+def test_codec_at_rest_bytes_ordering():
+    arr = _rand_shard(np.random.default_rng(2), (4096,))
+    sizes = {m: encode_shard(arr, m)[0].nbytes for m in AT_REST_DTYPES}
+    assert sizes["int8"] < sizes["bf16"] < sizes["exact"] == arr.nbytes
+    for m in AT_REST_DTYPES:  # the planner's constant matches the codec
+        assert sizes[m] == pytest.approx(
+            AT_REST_BYTES_PER_AMP[m] * arr.size, rel=0.01)
+
+
+# ======================================================================
+# StorageConfig
+# ======================================================================
+
+def test_storage_config_parse():
+    cfg = StorageConfig.parse("int8:dram_kib=2:tol=0.1:prefetch=0")
+    assert cfg.at_rest_dtype == "int8"
+    assert cfg.dram_bytes == 2048
+    assert cfg.error_tolerance == 0.1
+    assert cfg.prefetch is False
+    assert StorageConfig.parse("off") is None
+    assert StorageConfig.coerce(None) is None
+    with pytest.raises(ValueError):
+        StorageConfig.parse("fp4")
+    with pytest.raises(ValueError):
+        StorageConfig.parse("exact:bogus=1")
+
+
+def test_storage_config_fingerprints_are_distinct():
+    fps = {StorageConfig.parse(s).fingerprint()
+           for s in ("exact", "bf16", "int8", "exact:dram_kib=1",
+                     "exact:tol=0.01")}
+    assert len(fps) == 5
+
+
+# ======================================================================
+# LRU eviction: property test against a reference model
+# ======================================================================
+
+def test_lru_eviction_matches_model(tmp_path):
+    rng = np.random.default_rng(1234)
+    n_shards, shard_len = 8, 64
+    shard_bytes = shard_len * 8  # complex64, exact tier
+    cap = 3
+    store = ShardStore(n_shards, shard_len, (), np.complex64,
+                       StorageConfig(at_rest_dtype="exact",
+                                     dram_bytes=cap * shard_bytes,
+                                     spill_dir=str(tmp_path)))
+    model: "OrderedDict[int, None]" = OrderedDict()  # head = coldest
+
+    def model_touch(s):
+        model.pop(s, None)
+        model[s] = None
+        while len(model) > cap:
+            model.popitem(last=False)
+
+    payload = {s: _rand_shard(rng, (shard_len,)) for s in range(n_shards)}
+    for s in range(n_shards):
+        store.put(s, payload[s])
+        model_touch(s)
+    for _ in range(300):
+        s = int(rng.integers(n_shards))
+        if rng.random() < 0.5:
+            payload[s] = _rand_shard(rng, (shard_len,))
+            store.put(s, payload[s])
+        else:
+            got = store.get_decoded(s)
+            assert np.array_equal(got, payload[s])
+        model_touch(s)
+        assert store.resident_shards() == tuple(model)
+        assert store.spilled_shards() == tuple(
+            sorted(set(range(n_shards)) - set(model)))
+    assert store.stats["evictions"] > 0 and store.stats["spill_loads"] > 0
+    store.close()
+    assert not os.listdir(tmp_path)  # close() removes every spill file
+
+
+def test_exact_spill_reload_is_bit_stable(tmp_path):
+    rng = np.random.default_rng(7)
+    store = ShardStore(4, 128, (), np.complex64,
+                       StorageConfig(at_rest_dtype="exact", dram_bytes=0,
+                                     spill_dir=str(tmp_path)))
+    shards = [_rand_shard(rng, (128,)) for _ in range(4)]
+    for s, arr in enumerate(shards):
+        store.put(s, arr)
+    assert store.resident_shards() == ()  # zero budget: everything on disk
+    for s, arr in enumerate(shards):
+        assert np.array_equal(store.get_decoded(s), arr)
+    assert store.error_bound == 0.0
+    store.close()
+
+
+# ======================================================================
+# engine runs under forced spilling
+# ======================================================================
+
+def _spill_eng(dtype="exact", tol=0.05, **kw):
+    # budget = ~2 of the 8 at-rest shards (scaled to the tier's width), so
+    # at least 6 shards must live on disk at any moment regardless of dtype
+    budget = int(AT_REST_BYTES_PER_AMP[dtype] * (1 << 5) * 2)
+    return engine_for(C8, 5, 3, 0, backend="offload", cache=None,
+                      storage=f"{dtype}:dram_bytes={budget}:tol={tol}", **kw)
+
+
+@pytest.mark.parametrize("dtype", AT_REST_DTYPES)
+def test_spilled_run_matches_oracle_within_bound(dtype):
+    eng = _spill_eng(dtype)
+    out = np.asarray(eng.run()).reshape(-1)
+    snap = eng.backend.storage_snapshot()
+    assert snap["spilled_shards"] * 2 >= snap["n_shards"]
+    assert snap["spills"] > 0
+    err = float(np.linalg.norm(out - REF8))
+    if dtype == "exact":
+        assert snap["error_bound"] == 0.0
+        assert_states_close(out, REF8)
+    else:
+        assert snap["error_bound"] > 0.0
+        assert err <= snap["error_bound"] + 1e-4
+        assert snap["relative_error_bound"] <= snap["error_tolerance"]
+
+
+def test_spilled_run_batch_matches_oracle():
+    rng = np.random.default_rng(3)
+    B = 3
+    psi0s = rng.standard_normal((B, 256)) + 1j * rng.standard_normal((B, 256))
+    psi0s = (psi0s / np.linalg.norm(psi0s, axis=1, keepdims=True)
+             ).astype(np.complex64)
+    eng = _spill_eng("exact")
+    outs = np.asarray(eng.run_batch(psi0s))
+    assert outs.shape == (B, 256)
+    for b in range(B):
+        assert_states_close(outs[b], simulate_np(C8, psi0=psi0s[b]),
+                            msg=f"batch row {b}")
+    snap = eng.backend.storage_snapshot()
+    assert snap["spilled_shards"] * 2 >= snap["n_shards"]
+
+
+def test_spilled_run_sweep_matches_oracle():
+    n = 6
+    sym = _ansatz(n)
+    eng = engine_for(sym, 4, 2, 0, backend="offload", cache=None,
+                     storage="exact:dram_kib=1")
+    batch = np.stack([_vals(n, s) for s in (7, 8)])
+    outs = np.asarray(eng.run_sweep(None, batch))
+    assert outs.shape == (2, 2**n)
+    for p in range(2):
+        assert_states_close(outs[p], simulate_np(_ansatz(n, list(batch[p]))),
+                            msg=f"sweep point {p}")
+    assert eng.backend.storage_snapshot()["spills"] > 0
+
+
+def test_spilled_overlap_ratio_holds():
+    eng = _spill_eng("exact")
+    eng.run()
+    assert eng.backend.overlap_ratio >= 0.8
+
+
+def test_tolerance_violation_is_typed():
+    eng = _spill_eng("int8", tol=1e-6)
+    with pytest.raises(StorageToleranceError):
+        eng.run()
+    # a tolerance rejection is NOT transient: retrying cannot help
+    assert not isinstance(StorageToleranceError(""), TRANSIENT_ERRORS)
+
+
+def test_spill_io_error_is_typed_and_transient():
+    with faults.inject(FaultPlan(seed=2).add("spill_io_error", count=1,
+                                             site="spill.write")):
+        with pytest.raises(SpillIOError) as ei:
+            _spill_eng("exact").run()
+    assert isinstance(ei.value, ShardTransferError)  # transient by taxonomy
+    assert isinstance(ei.value, TRANSIENT_ERRORS)
+    # the failed run leaked nothing that breaks the next one
+    out = np.asarray(_spill_eng("exact").run()).reshape(-1)
+    assert_states_close(out, REF8)
+
+
+def test_spill_read_io_error_is_typed():
+    with faults.inject(FaultPlan(seed=2).add("spill_io_error", count=1,
+                                             site="spill.read")):
+        with pytest.raises(SpillIOError):
+            _spill_eng("exact").run()
+
+
+def test_storage_snapshot_in_provenance():
+    eng = _spill_eng("bf16")
+    eng.run()
+    snap = eng.provenance["storage"]
+    for k in ("at_rest_dtype", "dram_budget_bytes", "n_shards",
+              "resident_shards", "spilled_shards", "error_bound",
+              "relative_error_bound", "error_tolerance", "spills",
+              "spill_loads", "evictions", "prefetches"):
+        assert k in snap, k
+    assert snap["at_rest_dtype"] == "bf16"
+
+
+# ======================================================================
+# keying, env, and guard rails
+# ======================================================================
+
+def test_circuit_key_separates_storage_tiers():
+    base = dict(L=5, R=3, G=0, backend="offload")
+    keys = {circuit_key_for(C8, storage=s, **base).digest
+            for s in (None, "exact", "bf16", "exact:dram_kib=1")}
+    assert len(keys) == 4
+
+
+def test_storage_env_forces_offload_tier(monkeypatch):
+    monkeypatch.setenv("REPRO_STORAGE", TINY)
+    eng = engine_for(C8, 5, 3, 0, backend="offload", cache=None)
+    assert eng.backend.storage is not None
+    out = np.asarray(eng.run()).reshape(-1)
+    assert_states_close(out, REF8)
+    assert eng.backend.storage_snapshot()["spills"] > 0
+    # non-offload backends ignore the env (storage is an offload concept)
+    dense = engine_for(C8, 8, 0, 0, backend="dense", cache=None)
+    assert_states_close(np.asarray(dense.run()), REF8)
+
+
+def test_storage_rejected_for_non_offload_backend():
+    with pytest.raises(ValueError, match="storage"):
+        engine_for(C8, 8, 0, 0, backend="pjit", cache=None, storage="exact")
+
+
+# ======================================================================
+# cost model + calibration: pricing the disk tier
+# ======================================================================
+
+def test_offload_pass_us_spill_term():
+    cm = DEFAULT_COST_MODEL
+    base = cm.offload_pass_us(10)
+    assert cm.offload_pass_us(10, 0.0) == base
+    half = cm.offload_pass_us(10, 0.5)
+    full = cm.offload_pass_us(10, 1.0)
+    assert base < half < full
+    assert full == pytest.approx(base + cm.spill_pass_us(10))
+    assert half == pytest.approx(base + 0.5 * cm.spill_pass_us(10))
+    # fraction saturates at 1 (a budget can't make I/O worse than "all disk")
+    assert cm.offload_pass_us(10, 3.0) == pytest.approx(full)
+
+
+def test_from_calibration_disk_floors():
+    cm = CostModel.from_calibration({"disk_gbps": 0.0, "at_rest_bytes": -1.0})
+    assert cm.disk_gbps >= 1e-3 and cm.at_rest_bytes >= 0.25
+
+
+def test_apply_to_cost_model_prices_spill():
+    cfg = StorageConfig.parse("exact:dram_kib=1")
+    cm = cfg.apply_to_cost_model(DEFAULT_COST_MODEL, n=12, L=8)
+    assert cm.at_rest_bytes == AT_REST_BYTES_PER_AMP["exact"]
+    assert cm.comm_weight > DEFAULT_COST_MODEL.comm_weight  # remaps cost more
+    # unbounded DRAM: no spilling, comm weight untouched
+    cm2 = StorageConfig.parse("bf16").apply_to_cost_model(
+        DEFAULT_COST_MODEL, n=12, L=8)
+    assert cm2.comm_weight == DEFAULT_COST_MODEL.comm_weight
+    assert cm2.at_rest_bytes == AT_REST_BYTES_PER_AMP["bf16"]
+
+
+def test_profile_disk_measures_positive_bandwidth(tmp_path):
+    out = profiler.profile_disk(10, repeats=2, spill_dir=str(tmp_path))
+    assert out["disk_gbps"] > 0.0
+    assert not os.listdir(tmp_path)  # probe files are cleaned up
+
+
+def test_calibration_version_gate(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_CALIBRATION", raising=False)  # conftest: "off"
+    path = str(tmp_path / "calibration.json")
+    calib = {
+        "version": 1,  # stale: predates disk_gbps/at_rest_bytes
+        "fingerprint": profiler.device_fingerprint(),
+        "measurements": {"shm_gbps": 100.0},
+        "cost_model": DEFAULT_COST_MODEL.to_dict(),
+    }
+    profiler.save_calibration(path, calib)
+    cm, info = profiler.resolve_calibration(path, refresh=True)
+    assert cm == DEFAULT_COST_MODEL
+    assert info["source"] == "version_mismatch"
+    assert info["file_version"] == 1
+    assert info["expected_version"] == profiler.CALIBRATION_VERSION
